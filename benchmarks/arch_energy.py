@@ -1,0 +1,24 @@
+"""Beyond-paper: the PSUM-precision-aware energy model applied to all 10
+assigned architectures (prefill 4k + MAC-preserving decode)."""
+from repro.configs import ARCH_NAMES, get_config
+from repro.energy import AcceleratorConfig, arch_layers, model_energy
+
+
+def run(print_fn=print):
+    out = {}
+    for name in ARCH_NAMES:
+        cfg = get_config(name)
+        layers = arch_layers(cfg, 4096)
+        for df, acc in (("WS", AcceleratorConfig()),
+                        ("WS-dec", AcceleratorConfig.llm_decode())):
+            base = model_energy(layers, acc, "WS", psum_bits=32)
+            a = model_energy(layers, acc, "WS", psum_bits=8, gs=2)
+            out[(name, df)] = base["total"] / a["total"]
+        print_fn(f"arch_energy,{name},"
+                 f"prefill4k_saving={1 - 1 / out[(name, 'WS')]:.2%},"
+                 f"decode_ratio={out[(name, 'WS-dec')]:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

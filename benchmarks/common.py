@@ -1,0 +1,84 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+from repro.data import DataConfig, SyntheticCorpus
+from repro.models.config import ModelConfig
+from repro.models.model import forward, init_lm, lm_loss
+from repro.optim import OptimConfig, apply_updates, decay_mask, \
+    init_opt_state
+
+# The small QAT testbed used by the accuracy benchmarks (Table I / Fig 5):
+# a 4-layer GQA transformer LM on the deterministic synthetic corpus.
+QAT_CFG = ModelConfig(name="qat-bench", family="dense", n_layers=4,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab=512, dtype="float32", scan_layers=False)
+QAT_DATA = DataConfig(vocab=512, seq_len=64, global_batch=8, seed=11)
+
+
+def train_qat(cfg: ModelConfig, steps: int = 60, lr: float = 3e-3,
+              eval_steps: int = 4, seed: int = 0):
+    """Train + eval one QAT variant; returns (final_train, eval_loss).
+
+    PSUM quantizer scales are calibrated from a forward pass before
+    training (running-accumulation statistics) — without this every ap
+    starts at a generic magnitude and the early QAT signal is identical
+    across gs (observed; the paper also calibrates before QAT)."""
+    corpus = SyntheticCorpus(QAT_DATA)
+    params = init_lm(jax.random.PRNGKey(seed), cfg)
+    if cfg.quant.enabled:
+        from repro.quant import calibrate_model
+        b0 = corpus.batch_at(999)
+        params = calibrate_model(params, cfg,
+                                 {"tokens": jnp.asarray(b0["tokens"])})
+    ocfg = OptimConfig(lr=lr, warmup_steps=max(steps // 10, 2),
+                       total_steps=steps, weight_decay=0.0)
+    state = init_opt_state(params, ocfg)
+    mask = decay_mask(params)
+
+    @jax.jit
+    def step(params, state, tokens, labels):
+        def loss_fn(p):
+            return lm_loss(forward(p, cfg, tokens), labels)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, state, _ = apply_updates(params, g, state, ocfg, mask)
+        return params, state, loss
+
+    last = None
+    for s in range(steps):
+        b = corpus.batch_at(s)
+        params, state, last = step(params, state, jnp.asarray(b["tokens"]),
+                                   jnp.asarray(b["labels"]))
+
+    @jax.jit
+    def eval_loss(params, tokens, labels):
+        return lm_loss(forward(params, cfg, tokens), labels)
+
+    tot = 0.0
+    for s in range(10_000, 10_000 + eval_steps):
+        b = corpus.batch_at(s)
+        tot += float(eval_loss(params, jnp.asarray(b["tokens"]),
+                               jnp.asarray(b["labels"])))
+    return float(last), tot / eval_steps
+
+
+def quant_variants(gs_values=(1, 2, 3, 4), n_p: int = 8) -> dict:
+    out = {"baseline_w8a8": QuantConfig.w8a8()}
+    for gs in gs_values:
+        out[f"apsq_gs{gs}"] = QuantConfig.apsq(gs=gs, n_p=n_p)
+    out["psq"] = QuantConfig.psq(n_p=n_p)
+    return out
+
+
+def timed(fn, *args, reps: int = 5, warmup: int = 2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6, out  # us

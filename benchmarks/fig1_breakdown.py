@@ -1,0 +1,27 @@
+"""Fig. 1: energy breakdown of IS/WS/OS for BERT-Base-128 by PSUM width."""
+from repro.energy import AcceleratorConfig, bert_base, model_energy
+
+COMPONENTS = ("ifmap", "weight", "psum", "ofmap", "op")
+
+
+def run(print_fn=print):
+    acc = AcceleratorConfig()
+    layers = bert_base(128)
+    rows = []
+    for bits in (8, 16, 32):
+        for df in ("IS", "WS", "OS"):
+            e = model_energy(layers, acc, df, psum_bits=bits)
+            shares = {k: e[k] / e["total"] for k in COMPONENTS}
+            rows.append((df, bits, e["total"], shares))
+            print_fn(
+                f"fig1,{df},psum_int{bits},total_J={e['total']:.3e}," +
+                ",".join(f"{k}={shares[k] * 100:.1f}%" for k in COMPONENTS))
+    # headline check: PSUM share at INT32 for WS
+    ws32 = next(r for r in rows if r[0] == "WS" and r[1] == 32)
+    print_fn(f"fig1,headline,WS INT32 psum share,"
+             f"{ws32[3]['psum'] * 100:.1f}% (paper: up to 69%)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

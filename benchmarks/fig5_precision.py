@@ -1,0 +1,35 @@
+"""Fig. 5: normalized energy + accuracy across PSUM precisions (WS, BERT
+energy model; accuracy from the QAT testbed at matching PSUM bits)."""
+from repro.core import PsumQuantConfig, QuantConfig
+from repro.energy import AcceleratorConfig, bert_base, model_energy
+
+from .common import QAT_CFG, train_qat
+
+
+def run(print_fn=print, steps: int = 50, with_accuracy: bool = True):
+    acc = AcceleratorConfig()
+    layers = bert_base(128)
+    base = model_energy(layers, acc, "WS", psum_bits=32)
+    out = []
+    for bits in (32, 16, 12, 8, 6, 4):
+        e = model_energy(layers, acc, "WS", psum_bits=bits, gs=2)
+        rel = e["total"] / base["total"]
+        row = {"bits": bits, "energy_rel": rel}
+        if with_accuracy and bits <= 16:
+            q = QuantConfig(enabled=True,
+                            psum=PsumQuantConfig("apsq", gs=2, n_p=8,
+                                                 bits=bits))
+            _, ev = train_qat(QAT_CFG.with_quant(q), steps=steps)
+            row["eval_loss"] = ev
+        out.append(row)
+        msg = f"fig5,psum_int{bits},energy_rel={rel:.3f}"
+        if "eval_loss" in row:
+            msg += f",eval_loss={row['eval_loss']:.4f}"
+        print_fn(msg)
+    print_fn("fig5,headline,energy saving flattens below INT8 while loss "
+             "rises (paper: INT8 technically optimal)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

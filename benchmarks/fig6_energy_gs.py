@@ -1,0 +1,41 @@
+"""Fig. 6: normalized energy across gs, models, IS + WS dataflows."""
+from repro.energy import (
+    AcceleratorConfig,
+    bert_base,
+    efficientvit_b1,
+    model_energy,
+    segformer_b0,
+)
+
+MODELS = {
+    "bert-base-128": bert_base(128),
+    "segformer-b0": segformer_b0(),
+    "efficientvit-b1": efficientvit_b1(),
+}
+PAPER = {  # paper-reported savings for reference
+    ("bert-base-128", "IS"): "28%", ("bert-base-128", "WS"): "50%",
+    ("segformer-b0", "IS"): "42%", ("segformer-b0", "WS"): "87->66%",
+    ("efficientvit-b1", "IS"): "40%", ("efficientvit-b1", "WS"): "68->57%",
+}
+
+
+def run(print_fn=print):
+    acc = AcceleratorConfig()
+    out = {}
+    for name, layers in MODELS.items():
+        for df in ("IS", "WS"):
+            base = model_energy(layers, acc, df, psum_bits=32)
+            rels = []
+            for gs in (1, 2, 3, 4):
+                e = model_energy(layers, acc, df, psum_bits=8, gs=gs)
+                rels.append(e["total"] / base["total"])
+            out[(name, df)] = rels
+            savs = ",".join(f"gs{g}={100 * (1 - r):.0f}%"
+                            for g, r in zip((1, 2, 3, 4), rels))
+            print_fn(f"fig6,{name},{df},savings:{savs},"
+                     f"paper:{PAPER[(name, df)]}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""Kernel benchmark (§III-C): APSQ Pallas kernel vs references.
+
+On this CPU container the kernel runs in interpret mode, so wall-clock is
+not a TPU signal; what we measure and report:
+  * bit-exactness vs the integer oracle across a shape sweep,
+  * accumulator traffic (bytes) of APSQ banks vs the INT32 baseline —
+    the quantity the paper's energy claim rides on (beta 4 -> 1),
+  * throughput of the jitted *fake-quant* APSQ GEMM vs plain GEMM on CPU
+    (QAT-time overhead of the technique).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QuantConfig, quant_dense, quant_params_init, \
+    calibrate_dense
+from repro.kernels.apsq_matmul import (
+    accumulator_vmem_bytes,
+    apsq_matmul_int8,
+    apsq_matmul_ref,
+    choose_exps,
+)
+
+from .common import timed
+
+
+def run(print_fn=print):
+    key = jax.random.PRNGKey(0)
+    # 1. correctness sweep (interpret mode)
+    ok = 0
+    for (m, k, n, n_p, gs) in [(32, 128, 64, 8, 2), (64, 256, 128, 4, 4),
+                               (16, 64, 32, 8, 1), (128, 512, 128, 16, 3)]:
+        x = jax.random.randint(key, (m, k), -128, 128, jnp.int8)
+        w = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -128,
+                               128, jnp.int8)
+        exps = choose_exps(x, w, n_p=n_p, gs=gs)
+        ref = apsq_matmul_ref(x, w, exps, n_p=n_p, gs=gs)
+        out = apsq_matmul_int8(x, w, exps, gs=gs, interpret=True)
+        assert np.array_equal(np.asarray(ref), np.asarray(out))
+        ok += 1
+    print_fn(f"kernel,bit_exact_cells={ok}/4")
+
+    # 2. accumulator bytes: the beta 4->1 story per output tile
+    for gs in (1, 2, 4):
+        v = accumulator_vmem_bytes(128, 128, gs)
+        print_fn(f"kernel,accumulator_bytes,gs={gs},"
+                 f"apsq={v['apsq_banks']},int32={v['baseline_int32']},"
+                 f"saving={1 - v['apsq_banks'] / v['baseline_int32']:.2f}")
+
+    # 3. QAT-time overhead of fake-quant APSQ vs plain matmul (CPU)
+    xf = jax.random.normal(key, (256, 1024))
+    wf = jax.random.normal(jax.random.fold_in(key, 2), (1024, 512)) * 0.05
+    cfg = QuantConfig.apsq(gs=2, n_p=8)
+    qp = calibrate_dense(quant_params_init(wf, cfg), xf, wf, cfg)
+
+    plain = jax.jit(lambda a, b: a @ b)
+    apsq = jax.jit(lambda a, b: quant_dense(a, b, qp, cfg))
+    t0, _ = timed(plain, xf, wf)
+    t1, y = timed(apsq, xf, wf)
+    rel = float(jnp.mean(jnp.abs(y - xf @ wf)) /
+                jnp.mean(jnp.abs(xf @ wf)))
+    print_fn(f"kernel,qat_overhead,plain_us={t0:.0f},apsq_us={t1:.0f},"
+             f"x{t1 / t0:.1f},rel_err={rel:.4f}")
+
+    # 4. INT8 KV-cache decode attention (second kernel): accuracy vs fp32
+    #    reference + the bandwidth story (decode cells are HBM-bound).
+    from repro.kernels.int8_kv_attention import (
+        cache_bytes, fp_attention_ref, int8_kv_attention_f32)
+    q = jax.random.normal(key, (2, 8, 64))
+    kv = jax.random.normal(jax.random.fold_in(key, 3), (2, 256, 2, 64))
+    vv = jax.random.normal(jax.random.fold_in(key, 4), (2, 256, 2, 64))
+    L = jnp.full((2,), 256, jnp.int32)
+    fp = fp_attention_ref(q, kv, vv, L)
+    out = int8_kv_attention_f32(q, kv, vv, L, block_s=128, interpret=True)
+    rel = float(jnp.mean(jnp.abs(out - fp)) / jnp.mean(jnp.abs(fp)))
+    cb = cache_bytes(128, 32768, 4, 128)  # tinyllama decode_32k cell
+    print_fn(f"kernel,int8_kv_attention,rel_err_vs_fp32={rel:.4f},"
+             f"decode32k_cache_bytes: bf16={cb['bf16']:.2e} -> "
+             f"int8={cb['int8']:.2e} ({cb['int8'] / cb['bf16']:.2f}x)")
+    return ok
+
+
+if __name__ == "__main__":
+    run()

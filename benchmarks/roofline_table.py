@@ -1,0 +1,65 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline markdown table."""
+import glob
+import json
+import os
+
+HW_NOTE = ("v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI; "
+           "terms are per-chip seconds from the loop-aware HLO analysis")
+
+
+def load_reports(out_dir: str = "experiments/dryrun") -> list:
+    reports = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            reports.append(json.load(f))
+    return reports
+
+
+def suggestion(rep: dict) -> str:
+    dom = rep.get("dominant", "")
+    if dom == "memory_s":
+        return ("raise arithmetic intensity: larger fused blocks / fewer "
+                "boundary copies (microbatch size, attention chunk sizes)")
+    if dom == "collective_s":
+        return ("cut gathered bytes: re-shard embeddings/weights, overlap "
+                "FSDP gathers with compute, INT8 DCN grads")
+    if dom == "dcn_s":
+        return "compress cross-pod traffic (INT8 grads) or shard over ICI"
+    return "increase per-chip work or reduce recompute (remat policy)"
+
+
+def fmt_row(r: dict) -> str:
+    if not r.get("ok"):
+        return (f"| {r['arch']} | {r['cell']} | {r['mesh']} | FAIL "
+                f"| | | | | {r.get('error', '')[:60]} |")
+    uf = r.get("useful_flops_fraction", 0.0)
+    tag = r.get("tag") or ""
+    variant = f" [{tag}]" if tag else ""
+    return ("| {arch}{v} | {cell} | {mesh} | {dom} | {c:.2e} | {m:.2e} | "
+            "{k:.2e} | {rf:.2f} | {uf:.2f} |").format(
+        arch=r["arch"], v=variant, cell=r["cell"], mesh=r["mesh"],
+        dom=r.get("dominant", "?").replace("_s", ""),
+        c=r.get("compute_s", 0), m=r.get("memory_s", 0),
+        k=r.get("collective_s", 0),
+        rf=r.get("roofline_fraction", 0), uf=uf)
+
+
+def run(print_fn=print, out_dir: str = "experiments/dryrun"):
+    reports = [r for r in load_reports(out_dir)]
+    if not reports:
+        print_fn("roofline,no dry-run reports found; run "
+                 "PYTHONPATH=src python -m repro.launch.dryrun first")
+        return []
+    print_fn(f"roofline,# {HW_NOTE}")
+    print_fn("| arch | cell | mesh | bottleneck | compute_s | memory_s | "
+             "collective_s | roofline_frac | useful_flops |")
+    print_fn("|---|---|---|---|---|---|---|---|---|")
+    for r in reports:
+        print_fn(fmt_row(r))
+    n_ok = sum(r.get("ok", False) for r in reports)
+    print_fn(f"roofline,cells_ok={n_ok}/{len(reports)}")
+    return reports
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Benchmark driver: one section per paper table/figure + system benches.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast]``
+Prints ``name,...`` CSV lines; every section maps to a paper artifact
+(see DESIGN.md §7) or a beyond-paper extension.
+"""
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip QAT training sections (energy-only)")
+    ap.add_argument("--steps", type=int, default=60,
+                    help="QAT steps per Table-I variant")
+    args = ap.parse_args()
+
+    from . import (arch_energy, fig1_breakdown, fig5_precision,
+                   fig6_energy_gs, kernel_bench, roofline_table,
+                   table2_area_proxy, table4_llama_energy)
+
+    sections = [
+        ("fig1 (energy breakdown)", lambda: fig1_breakdown.run()),
+        ("fig6 (energy vs gs)", lambda: fig6_energy_gs.run()),
+        ("table4 (LLaMA2 energy)", lambda: table4_llama_energy.run()),
+        ("table2 (RAE area proxy)", lambda: table2_area_proxy.run()),
+        ("arch_energy (10 assigned archs)", lambda: arch_energy.run()),
+        ("kernel (Pallas APSQ)", lambda: kernel_bench.run()),
+        ("roofline (dry-run aggregate)", lambda: roofline_table.run()),
+    ]
+    if not args.fast:
+        from . import table1_accuracy
+        sections.insert(2, ("table1 (QAT accuracy sweep)",
+                            lambda: table1_accuracy.run(steps=args.steps)))
+        sections.insert(3, ("fig5 (energy+loss vs precision)",
+                            lambda: fig5_precision.run(steps=args.steps)))
+
+    for name, fn in sections:
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        fn()
+        print(f"=== done in {time.time() - t0:.1f}s ===", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Reproduce the paper's energy artifacts (Figs 1/5/6, Table IV) as text.
+
+    PYTHONPATH=src python examples/energy_report.py
+"""
+from benchmarks import (fig1_breakdown, fig5_precision, fig6_energy_gs,
+                        table2_area_proxy, table4_llama_energy)
+
+print("=" * 72)
+print("Fig 1 — energy breakdown, BERT-Base-128, IS/WS/OS x PSUM width")
+print("=" * 72)
+fig1_breakdown.run()
+print()
+print("=" * 72)
+print("Fig 5 — normalized WS energy vs PSUM precision (energy only)")
+print("=" * 72)
+fig5_precision.run(with_accuracy=False)
+print()
+print("=" * 72)
+print("Fig 6 — normalized energy vs gs (3 models, IS + WS)")
+print("=" * 72)
+fig6_energy_gs.run()
+print()
+print("=" * 72)
+print("Table IV — LLaMA2-7B (P_o=1, P_ci=P_co=32, seq 4096)")
+print("=" * 72)
+table4_llama_energy.run()
+print()
+print("=" * 72)
+print("Table II — RAE area proxy")
+print("=" * 72)
+table2_area_proxy.run()

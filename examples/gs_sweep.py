@@ -1,0 +1,24 @@
+"""Table-I style sweep: QAT the same model at every PSUM strategy.
+
+    PYTHONPATH=src python examples/gs_sweep.py --steps 80
+
+Prints eval loss for baseline W8A8, APSQ gs=1..4, PSQ — the reproduction
+of the paper's accuracy-vs-grouping claim (lower = better).
+"""
+import argparse
+
+from benchmarks.table1_accuracy import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80)
+    args = ap.parse_args()
+    results = run(steps=args.steps)
+    print("\nsummary (eval loss, lower=better):")
+    for name, ev in sorted(results.items(), key=lambda kv: kv[1]):
+        print(f"  {name:16s} {ev:.4f}")
+
+
+if __name__ == "__main__":
+    main()

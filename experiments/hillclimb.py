@@ -1,0 +1,36 @@
+"""§Perf hillclimb driver: re-lower a cell with knob variations and diff
+the three roofline terms.
+
+    PYTHONPATH=src python experiments/hillclimb.py rwkv1
+
+Each named iteration below is one hypothesis -> change -> measure cycle;
+results are copied into EXPERIMENTS.md §Perf as they land.
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.dryrun import run_cell, save_report  # noqa
+
+
+def show(rep):
+    print(f"  -> comp={rep.get('compute_s', 0):.3e} "
+          f"mem={rep.get('memory_s', 0):.3e} "
+          f"coll={rep.get('collective_s', 0):.3e} "
+          f"dom={rep.get('dominant')} "
+          f"useful={rep.get('useful_flops_fraction', 0):.2f} "
+          f"temp={rep.get('temp_size_in_bytes', 0) / 2**30:.2f}GiB")
+    return rep
+
+
+def measure(name, arch, cell, **kw):
+    print(f"[{name}]", {k: v for k, v in kw.items()
+                        if k not in ('arch', 'cell')})
+    rep = run_cell(arch, cell, verbose=False, **kw)
+    if not rep["ok"]:
+        print("  FAILED:", rep.get("error"))
+    else:
+        show(rep)
+        save_report(rep)
+    return rep

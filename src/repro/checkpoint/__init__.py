@@ -1,0 +1,12 @@
+"""Sharded checkpoints: manifest, async save, reshard-on-load, SIGTERM."""
+from .store import (
+    AsyncCheckpointer,
+    install_signal_handler,
+    latest_step,
+    list_steps,
+    restore,
+    save,
+)
+
+__all__ = ["AsyncCheckpointer", "install_signal_handler", "latest_step",
+           "list_steps", "restore", "save"]

@@ -1,0 +1,69 @@
+"""Architecture registry: the 10 assigned architectures (+ paper models).
+
+``get_config(name)`` returns the full published config; ``get_smoke(name)``
+the reduced same-family config used by CPU smoke tests.  The paper's own
+evaluation models (BERT-Base / Segformer-B0 / EfficientViT-B1 / LLaMA2-7B)
+live in ``repro.energy.workloads`` as analytical layer walks.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.core import QuantConfig
+from repro.models.config import SHAPE_CELLS, ModelConfig, ShapeCell
+
+_MODULES = {
+    "rwkv6-3b": "rwkv6_3b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "deepseek-7b": "deepseek_7b",
+    "chatglm3-6b": "chatglm3_6b",
+    "starcoder2-15b": "starcoder2_15b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "internvl2-26b": "internvl2_26b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str, quant: str = "none", gs: int = 2,
+               n_p: int = 8) -> ModelConfig:
+    """Full published config, optionally with the paper's PSUM quantization
+    (``quant`` in {none, w8a8, psq, apsq})."""
+    cfg = _module(name).CONFIG
+    if quant == "apsq":
+        cfg = cfg.with_quant(QuantConfig.apsq(gs=gs, n_p=n_p))
+    elif quant == "psq":
+        cfg = cfg.with_quant(QuantConfig.psq(n_p=n_p))
+    elif quant == "w8a8":
+        cfg = cfg.with_quant(QuantConfig.w8a8())
+    return cfg.validate()
+
+
+def get_smoke(name: str, **kw) -> ModelConfig:
+    return _module(name).smoke_config().validate()
+
+
+def cells_for(name: str) -> dict:
+    """The assignment's shape cells runnable for this arch.
+
+    ``long_500k`` only for sub-quadratic archs (rwkv6, recurrentgemma);
+    full-attention archs skip it (noted in DESIGN.md §5).
+    """
+    cfg = get_config(name)
+    cells = {k: v for k, v in SHAPE_CELLS.items() if k != "long_500k"}
+    if cfg.sub_quadratic:
+        cells["long_500k"] = SHAPE_CELLS["long_500k"]
+    return cells
+
+
+__all__ = ["ARCH_NAMES", "SHAPE_CELLS", "ModelConfig", "ShapeCell",
+           "cells_for", "get_config", "get_smoke"]

@@ -1,0 +1,38 @@
+"""Core APSQ library: quantizers, Algorithm-1 accumulation, quantized linears."""
+from .quantizers import (
+    QuantSpec,
+    floor_ste,
+    grad_scale,
+    init_alpha_from,
+    init_log2_alpha_from,
+    lsq_gradient_scale,
+    lsq_quantize,
+    po2_quantize,
+    po2_quantize_codes,
+    po2_scale,
+    qrange,
+    round_ste,
+)
+from .apsq import (
+    apsq_accumulate,
+    apsq_accumulate_reference,
+    apsq_matmul,
+    psq_accumulate,
+)
+from .layers import (
+    PsumQuantConfig,
+    QuantConfig,
+    calibrate_dense,
+    effective_n_p,
+    quant_dense,
+    quant_params_init,
+)
+
+__all__ = [
+    "QuantSpec", "floor_ste", "grad_scale", "init_alpha_from",
+    "init_log2_alpha_from", "lsq_gradient_scale", "lsq_quantize",
+    "po2_quantize", "po2_quantize_codes", "po2_scale", "qrange", "round_ste",
+    "apsq_accumulate", "apsq_accumulate_reference", "apsq_matmul",
+    "psq_accumulate", "PsumQuantConfig", "QuantConfig", "calibrate_dense",
+    "effective_n_p", "quant_dense", "quant_params_init",
+]

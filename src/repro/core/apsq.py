@@ -1,0 +1,215 @@
+"""APSQ — Additive Partial Sum Quantization (paper §III, Algorithm 1).
+
+Tile-based computation splits a GEMM's reduction dimension K into
+``n_p = ceil(C_i / P_ci)`` partial-sum (PSUM) tiles (eq. 8).  A classical
+IS/WS accelerator stores every additive PSUM ``AP_j`` (eq. 9) at INT32;
+APSQ instead re-quantizes the *running accumulation* to INT8 (eq. 10):
+
+    AP_i = Q_k^i(T_pi + alpha_{i-1} * AP_{i-1})
+
+The grouping strategy (Algorithm 1) applies APSQ once per group of ``gs``
+tiles and plain PSUM quantization (PSQ) to the other ``gs - 1`` tiles,
+trading cascaded rounding error against PSUM buffer footprint.
+
+This module provides:
+  * ``apsq_accumulate_reference`` — a direct, unrolled transcription of
+    Algorithm 1 (the oracle for tests and the Pallas kernel).
+  * ``apsq_accumulate``           — lax.scan formulation (one step per full
+    group) for large ``n_p`` so HLO size stays O(1) in n_p.
+  * ``apsq_matmul``               — fused tiles-on-the-fly GEMM so the
+    [n_p, ..., N] tile tensor is never materialized.
+  * ``psq_accumulate``            — plain PSQ baseline (== gs >= n_p).
+
+All outputs are *dequantized* (fake-quant floats on the INT grid); the
+true-integer path lives in ``repro.kernels.apsq_matmul``.
+
+Semantics of Algorithm 1 (indices 0-based, group starts S = {0, gs, 2gs, ...}):
+  AP*_0 = Q_0(T_p0)
+  group start i>0 : AP*_i = Q_i( sum_{j=i-gs}^{i-1} deq(AP*_j) + T_pi )
+  tail j (< n_p-1): AP*_j = Q_j(T_pj)
+  final tile n_p-1:
+    if n_p-1 in S: T_o = deq(AP*_{n_p-1})                      (line 5)
+    else:          T_o = deq(Q_{n_p-1}( sum_{l=i_last}^{n_p-2}
+                                        deq(AP*_l) + T_p{n_p-1} ))  (line 14)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .quantizers import po2_quantize
+
+
+def _fq(x, log2_alpha, bits):
+    """PSUM fake quantizer: PO2-scale LSQ (paper forces PSUM scales to 2^k)."""
+    return po2_quantize(x, log2_alpha, bits=bits, signed=True)
+
+
+# ---------------------------------------------------------------------------
+# Reference (unrolled Algorithm 1) — oracle for tests and the Pallas kernel.
+# ---------------------------------------------------------------------------
+
+def apsq_accumulate_reference(tiles, log2_alphas, gs: int, bits: int = 8):
+    """Direct transcription of Algorithm 1.
+
+    tiles:       [n_p, ...] PSUM tiles (floats; int products in deployment)
+    log2_alphas: [n_p] learned log2 scales, one per quantizer Q_k^i
+    gs:          group size (>= 1)
+    Returns the dequantized output tile T_o with shape tiles.shape[1:].
+    """
+    n_p = tiles.shape[0]
+    if gs < 1:
+        raise ValueError(f"gs must be >= 1, got {gs}")
+    stored = [None] * n_p  # dequantized stored INT8 PSUMs
+
+    for i in range(0, n_p, gs):  # group starts
+        prev = 0.0
+        for j in range(max(0, i - gs), i):
+            prev = prev + stored[j]
+        stored[i] = _fq(prev + tiles[i], log2_alphas[i], bits)  # APSQ (line 5)
+        if i == n_p - 1:
+            return stored[i]
+        for j in range(i + 1, min(i + gs, n_p)):
+            if j < n_p - 1:
+                stored[j] = _fq(tiles[j], log2_alphas[j], bits)  # PSQ (line 9)
+            else:
+                acc = tiles[j]
+                for l in range(i, n_p - 1):
+                    acc = acc + stored[l]
+                return _fq(acc, log2_alphas[j], bits)  # final (line 14)
+    raise AssertionError("unreachable")
+
+
+# ---------------------------------------------------------------------------
+# Scan formulation — O(1) HLO in n_p. One scan step per *full* group; the
+# (possibly partial) last group is peeled off and handled exactly as the
+# reference does.
+# ---------------------------------------------------------------------------
+
+def _group_step(carry, xs, *, gs, bits):
+    """One full group: APSQ on the start tile, PSQ on the gs-1 tail tiles.
+
+    carry: dequantized sum of the previous group's stored tiles.
+    xs:    (tiles [gs, ...], log2_alphas [gs])
+    """
+    tiles, las = xs
+    ap_start = _fq(carry + tiles[0], las[0], bits)
+    if gs > 1:
+        tails = jax.vmap(lambda t, la: _fq(t, la, bits))(tiles[1:], las[1:])
+        new_carry = ap_start + jnp.sum(tails, axis=0)
+    else:
+        new_carry = ap_start
+    return new_carry, ()
+
+
+def apsq_accumulate(tiles, log2_alphas, gs: int, bits: int = 8):
+    """Scan-based Algorithm 1; numerically identical to the reference."""
+    n_p = tiles.shape[0]
+    if gs < 1:
+        raise ValueError(f"gs must be >= 1, got {gs}")
+    n_groups = -(-n_p // gs)
+    last_start = (n_groups - 1) * gs
+    n_full = last_start // gs  # number of groups handled by the scan
+
+    carry = jnp.zeros(tiles.shape[1:], tiles.dtype)
+    if n_full > 0:
+        xs = (
+            tiles[: n_full * gs].reshape((n_full, gs) + tiles.shape[1:]),
+            log2_alphas[: n_full * gs].reshape(n_full, gs),
+        )
+        carry, _ = jax.lax.scan(partial(_group_step, gs=gs, bits=bits), carry, xs)
+
+    # Last group (indices last_start .. n_p-1), possibly partial.
+    i = last_start
+    ap_start = _fq(carry + tiles[i], log2_alphas[i], bits)
+    if i == n_p - 1:
+        return ap_start
+    acc = ap_start
+    for j in range(i + 1, n_p - 1):  # at most gs-2 unrolled PSQ tiles
+        acc = acc + _fq(tiles[j], log2_alphas[j], bits)
+    return _fq(acc + tiles[n_p - 1], log2_alphas[n_p - 1], bits)
+
+
+def psq_accumulate(tiles, log2_alphas, bits: int = 8):
+    """Plain PSUM quantization baseline: every tile quantized independently,
+    summed once at the end (== Algorithm 1 with gs >= n_p)."""
+    n_p = tiles.shape[0]
+    return apsq_accumulate(tiles, log2_alphas, gs=n_p, bits=bits)
+
+
+# ---------------------------------------------------------------------------
+# Fused GEMM: PSUM tiles are produced on the fly inside the scan so the
+# [n_p, ..., N] tile tensor never materializes (critical for QAT memory).
+# ---------------------------------------------------------------------------
+
+def _matmul_tile(xg, wg):
+    """xg: [..., kt], wg: [kt, N] -> [..., N] partial sum."""
+    return jax.lax.dot_general(
+        xg, wg, (((xg.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _fused_group_step(carry, xs, *, gs, bits):
+    xg, wg, las = xs  # xg: [gs, ..., kt], wg: [gs, kt, N], las: [gs]
+    tiles = jax.vmap(_matmul_tile)(xg, wg)
+    return _group_step(carry, (tiles, las), gs=gs, bits=bits)
+
+
+def apsq_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    log2_alphas: jax.Array,
+    *,
+    n_p: int,
+    gs: int,
+    bits: int = 8,
+) -> jax.Array:
+    """GEMM ``x @ w`` with APSQ-quantized PSUM accumulation.
+
+    x: [..., K] (already fake-quantized activations)
+    w: [K, N]   (already fake-quantized weights)
+    log2_alphas: [n_p] PSUM quantizer scales.
+    K must be divisible by n_p (configs guarantee this; the paper's
+    n_p = ceil(C_i/P_ci) with C_i a multiple of P_ci).
+    """
+    K = x.shape[-1]
+    if K % n_p:
+        raise ValueError(f"K={K} not divisible by n_p={n_p}")
+    if log2_alphas.shape != (n_p,):
+        raise ValueError(f"log2_alphas must be [n_p]={n_p}, got {log2_alphas.shape}")
+    if n_p == 1:
+        # Single PSUM tile: output quantization only (line 2 of Algorithm 1).
+        return _fq(_matmul_tile(x, w), log2_alphas[0], bits)
+
+    kt = K // n_p
+    N = w.shape[-1]
+    n_groups = -(-n_p // gs)
+    last_start = (n_groups - 1) * gs
+    n_full = last_start // gs
+
+    xt = x.reshape(x.shape[:-1] + (n_p, kt))
+    xt = jnp.moveaxis(xt, -2, 0)  # [n_p, ..., kt]
+    wt = w.reshape(n_p, kt, N)
+
+    carry = jnp.zeros(x.shape[:-1] + (N,), jnp.float32)
+    if n_full > 0:
+        xs = (
+            xt[: n_full * gs].reshape((n_full, gs) + xt.shape[1:]),
+            wt[: n_full * gs].reshape(n_full, gs, kt, N),
+            log2_alphas[: n_full * gs].reshape(n_full, gs),
+        )
+        carry, _ = jax.lax.scan(
+            partial(_fused_group_step, gs=gs, bits=bits), carry, xs
+        )
+
+    i = last_start
+    ap_start = _fq(carry + _matmul_tile(xt[i], wt[i]), log2_alphas[i], bits)
+    if i == n_p - 1:
+        return ap_start
+    acc = ap_start
+    for j in range(i + 1, n_p - 1):
+        acc = acc + _fq(_matmul_tile(xt[j], wt[j]), log2_alphas[j], bits)
+    return _fq(acc + _matmul_tile(xt[n_p - 1], wt[n_p - 1]), log2_alphas[n_p - 1], bits)

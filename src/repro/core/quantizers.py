@@ -1,0 +1,145 @@
+"""Quantizers used throughout the APSQ framework.
+
+Implements (paper §II-B):
+  * ``round_ste``      — rounding with a straight-through gradient [24].
+  * ``lsq_quantize``   — Learned Step Size Quantization (LSQ) [10] fake
+    quantization.  The gradient w.r.t. the learned scale ``alpha`` follows
+    directly from expressing the quantizer with ``round_ste`` and letting
+    autodiff do the rest (this reproduces LSQ eq. (3) exactly).
+  * ``po2_scale``      — power-of-two scale ``2^round(log2_alpha)`` learned
+    via STE so re-scaling lowers to a hardware shift (paper §II-B).
+  * ``grad_scale``     — LSQ gradient-scale trick ``g = 1/sqrt(N*Qp)``.
+
+All functions are pure and jit/vmap/scan friendly; QAT operates on floats
+("fake quant"): values are snapped to the integer grid but kept in the
+compute dtype.  The Pallas deployment kernel (kernels/apsq_matmul) does the
+true-integer version and is tested bit-exact against these semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def qrange(bits: int, signed: bool = True) -> tuple[int, int]:
+    """(Qn, Qp) clip bounds for a ``bits``-wide integer grid."""
+    if signed:
+        return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    return 0, 2**bits - 1
+
+
+def round_ste(x: jax.Array) -> jax.Array:
+    """Round-to-nearest-even with identity (straight-through) gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def floor_ste(x: jax.Array) -> jax.Array:
+    """Floor with identity gradient (used for power-of-two exponents)."""
+    return x + jax.lax.stop_gradient(jnp.floor(x) - x)
+
+
+def grad_scale(x: jax.Array, scale) -> jax.Array:
+    """Forward identity; gradient multiplied by ``scale`` (LSQ trick)."""
+    return x * scale + jax.lax.stop_gradient(x * (1.0 - scale))
+
+
+def lsq_gradient_scale(numel: int, qp: int) -> float:
+    """LSQ paper's per-quantizer gradient scale g = 1/sqrt(numel * Qp)."""
+    return 1.0 / math.sqrt(max(int(numel) * int(qp), 1))
+
+
+def lsq_quantize(
+    x: jax.Array,
+    alpha: jax.Array,
+    bits: int = 8,
+    signed: bool = True,
+    g: float | None = None,
+) -> jax.Array:
+    """LSQ fake quantization: ``alpha * round(clip(x/alpha, Qn, Qp))``.
+
+    ``alpha`` may be scalar (per-tensor) or broadcastable (per-channel).
+    ``g`` is the LSQ gradient scale; if None it is derived from x.size.
+    """
+    qn, qp = qrange(bits, signed)
+    if g is None:
+        g = lsq_gradient_scale(x.size, qp)
+    alpha = grad_scale(alpha, g)
+    # Clip with STE-through-boundary exactly as LSQ: gradients to x pass only
+    # inside the clip range; gradients to alpha accumulate from the rounding
+    # residual inside and the saturation value outside.  jnp.clip + round_ste
+    # reproduces this under autodiff.
+    scaled = x / alpha
+    clipped = jnp.clip(scaled, qn, qp)
+    return round_ste(clipped) * alpha
+
+
+def po2_scale(log2_alpha: jax.Array) -> jax.Array:
+    """Effective power-of-two scale ``2^floor(log2_alpha)`` with STE.
+
+    The paper (§II-B) forces PSUM scaling factors to power-of-two by
+    learning ``2^{floor(log2 alpha)}`` through a straight-through estimator,
+    replacing the dequant multiply by a shift in hardware.
+    """
+    return jnp.exp2(floor_ste(log2_alpha))
+
+
+def po2_quantize(
+    x: jax.Array,
+    log2_alpha: jax.Array,
+    bits: int = 8,
+    signed: bool = True,
+    g: float | None = None,
+) -> jax.Array:
+    """Fake quantization with a learned power-of-two scale (PSUM quantizer).
+
+    Equivalent to ``lsq_quantize`` but the scale is snapped to 2^k so that
+    dequantization is a bit-shift in the RAE / Pallas kernel.
+    """
+    qn, qp = qrange(bits, signed)
+    if g is None:
+        g = lsq_gradient_scale(x.size, qp)
+    log2_alpha = grad_scale(log2_alpha, g)
+    alpha = po2_scale(log2_alpha)
+    clipped = jnp.clip(x / alpha, qn, qp)
+    return round_ste(clipped) * alpha
+
+
+def po2_quantize_codes(x: jax.Array, log2_alpha: jax.Array, bits: int = 8):
+    """Integer codes + shift exponent (deployment view, no gradients)."""
+    qn, qp = qrange(bits, True)
+    exp = jnp.floor(log2_alpha).astype(jnp.int32)
+    alpha = jnp.exp2(exp.astype(x.dtype))
+    codes = jnp.clip(jnp.round(x / alpha), qn, qp).astype(jnp.int8)
+    return codes, exp
+
+
+def init_alpha_from(x: jax.Array, bits: int = 8, signed: bool = True) -> jax.Array:
+    """LSQ initialization: alpha = 2*mean(|x|)/sqrt(Qp)."""
+    _, qp = qrange(bits, signed)
+    return 2.0 * jnp.mean(jnp.abs(x)) / jnp.sqrt(float(qp)) + 1e-12
+
+
+def init_log2_alpha_from(x: jax.Array, bits: int = 8) -> jax.Array:
+    """PO2 variant of LSQ init (log2 domain)."""
+    return jnp.log2(init_alpha_from(x, bits))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of one quantizer (used by configs & model surgery)."""
+
+    bits: int = 8
+    signed: bool = True
+    po2: bool = False  # power-of-two scale (PSUM quantizers)
+
+    @property
+    def qn(self) -> int:
+        return qrange(self.bits, self.signed)[0]
+
+    @property
+    def qp(self) -> int:
+        return qrange(self.bits, self.signed)[1]

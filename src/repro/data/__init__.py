@@ -1,0 +1,10 @@
+"""Deterministic synthetic data pipeline (host-sharded, prefetching)."""
+from .pipeline import (
+    DataConfig,
+    PrefetchIterator,
+    SyntheticCorpus,
+    device_put_batch,
+)
+
+__all__ = ["DataConfig", "PrefetchIterator", "SyntheticCorpus",
+           "device_put_batch"]

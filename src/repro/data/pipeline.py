@@ -1,0 +1,136 @@
+"""Deterministic synthetic data pipeline with host sharding and prefetch.
+
+Design goals at 1000+ nodes:
+  * **Step-indexed determinism** — ``batch_at(step)`` is a pure function of
+    (seed, step, host), so an elastic restart replays the exact token
+    stream with no data-loader state in the checkpoint.
+  * **Host sharding** — each host materializes only its slice of the global
+    batch (``host_id / num_hosts``); the launcher assembles the global
+    array via ``jax.make_array_from_process_local_data`` on real clusters
+    and a plain reshape on single-host CPU.
+  * **Background prefetch** — a double-buffered thread keeps the next batch
+    ready so the input pipeline never blocks the step (straggler hygiene).
+
+The corpus is a deterministic synthetic "language": a mixture of Zipfian
+unigrams and copied motifs, so cross-entropy decreases meaningfully during
+the example QAT runs (unlike uniform noise) while requiring no files.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.3
+    motif_len: int = 16
+    n_motifs: int = 64
+    frontend: str | None = None   # audio | vision -> also emit embeddings
+    d_model: int = 0
+    n_frontend_tokens: int = 0
+
+
+class SyntheticCorpus:
+    """Deterministic synthetic token stream (Zipf unigrams + motif copies)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        # Fixed motif bank; sequences interleave motifs with Zipf noise so
+        # there is real predictable structure to learn.
+        self.motifs = rng.integers(
+            0, cfg.vocab, size=(cfg.n_motifs, cfg.motif_len), dtype=np.int32)
+
+    def _zipf(self, rng, n):
+        # Bounded Zipf via inverse-CDF on a truncated harmonic series.
+        ranks = np.arange(1, self.cfg.vocab + 1, dtype=np.float64)
+        # Cache the CDF (vocab can be 256k; compute once).
+        if not hasattr(self, "_cdf"):
+            w = ranks ** (-self.cfg.zipf_a)
+            self._cdf = np.cumsum(w) / np.sum(w)
+        u = rng.random(n)
+        return np.searchsorted(self._cdf, u).astype(np.int32)
+
+    def sequence(self, rng, length: int) -> np.ndarray:
+        out = np.empty(length + 1, np.int32)
+        i = 0
+        while i <= length:
+            if rng.random() < 0.5:  # motif copy
+                m = self.motifs[rng.integers(self.cfg.n_motifs)]
+                take = min(len(m), length + 1 - i)
+                out[i:i + take] = m[:take]
+                i += take
+            else:
+                take = min(int(rng.integers(8, 33)), length + 1 - i)
+                out[i:i + take] = self._zipf(rng, take)
+                i += take
+        return out
+
+    def batch_at(self, step: int, host_id: int = 0,
+                 num_hosts: int = 1) -> dict:
+        """Pure function of (seed, step, host): the host's batch slice."""
+        cfg = self.cfg
+        assert cfg.global_batch % num_hosts == 0
+        local_b = cfg.global_batch // num_hosts
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, host_id]))
+        seqs = np.stack([self.sequence(rng, cfg.seq_len)
+                         for _ in range(local_b)])
+        batch = {"tokens": seqs[:, :-1], "labels": seqs[:, 1:]}
+        if cfg.frontend == "vision":
+            batch["embeds"] = rng.standard_normal(
+                (local_b, cfg.n_frontend_tokens, cfg.d_model),
+                dtype=np.float32)
+        elif cfg.frontend == "audio":
+            batch["enc_embeds"] = rng.standard_normal(
+                (local_b, cfg.n_frontend_tokens or cfg.seq_len, cfg.d_model),
+                dtype=np.float32)
+        return batch
+
+
+class PrefetchIterator:
+    """Double-buffered background prefetch over ``corpus.batch_at``."""
+
+    def __init__(self, corpus: SyntheticCorpus, start_step: int = 0,
+                 host_id: int = 0, num_hosts: int = 1, depth: int = 2):
+        self.corpus = corpus
+        self.step = start_step
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = self.corpus.batch_at(step, self.host_id, self.num_hosts)
+            try:
+                self._q.put((step, batch), timeout=1.0)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __next__(self):
+        step, batch = self._q.get()
+        return step, batch
+
+    def close(self):
+        self._stop.set()
+
+
+def device_put_batch(batch: dict, shardings: dict | None = None) -> dict:
+    """Host numpy batch -> device arrays (sharded when shardings given)."""
+    if shardings is None:
+        return jax.tree.map(jax.numpy.asarray, batch)
+    return {k: jax.device_put(v, shardings.get(k)) for k, v in batch.items()}

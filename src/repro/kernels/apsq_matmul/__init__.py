@@ -1,0 +1,30 @@
+"""APSQ matmul Pallas kernel: W8A8 GEMM with INT8 PSUM banks (RAE on TPU)."""
+from .kernel import (
+    accumulator_vmem_bytes,
+    apsq_matmul_kernel,
+    baseline_matmul_kernel,
+)
+from .ops import (
+    apsq_matmul_f32,
+    apsq_matmul_int8,
+    baseline_matmul_int8,
+    calibrate_exps,
+    quantize_operands,
+)
+from .ref import (
+    apsq_matmul_ref,
+    baseline_matmul_ref,
+    choose_exps,
+    dequantize_psum,
+    psum_tiles,
+    quantize_psum,
+    rshift_round,
+)
+
+__all__ = [
+    "accumulator_vmem_bytes", "apsq_matmul_kernel", "baseline_matmul_kernel",
+    "apsq_matmul_f32", "apsq_matmul_int8", "baseline_matmul_int8",
+    "calibrate_exps", "quantize_operands", "apsq_matmul_ref",
+    "baseline_matmul_ref", "choose_exps", "dequantize_psum", "psum_tiles",
+    "quantize_psum", "rshift_round",
+]

@@ -1,0 +1,220 @@
+"""Pallas TPU kernel: W8A8 GEMM with INT8 additive-partial-sum banks.
+
+TPU-native adaptation of the paper's Reconfigurable APSQ Engine (RAE):
+
+  * the grid's K dimension IS the PSUM tiling — one grid step per PSUM tile
+    ``T_pi`` (``n_p = K / block_k``, the paper's ``ceil(C_i / P_ci)``),
+  * the RAE's four PSUM SRAM banks become a ``[gs, bm, bn]`` INT8 VMEM
+    scratch — the running accumulator lives at 1 byte/element instead of the
+    4 bytes/element an INT32 accumulator needs (the paper's beta: 4 -> 1),
+  * quant/dequant are shift operations (power-of-two scales), matching the
+    RAE's shifter modules: ``quantize = clip((v + 2^(e-1)) >> e)``,
+    ``dequantize = code << e``,
+  * the RAE's s0/s1/s2 mux encodings become compile-time specialization on
+    the static ``gs`` — each group size compiles its own kernel, which is
+    the TPU-idiomatic form of "reconfigurability".
+
+Grid: ``(M/bm, N/bn, n_p)`` with the K dimension sequential ("arbitrary")
+so the banks persist across PSUM tiles of one output tile.  Block specs put
+x/w/out tiles in VMEM; the per-tile shift exponents sit in SMEM.
+
+Validated bit-exact against ``ref.apsq_matmul_ref`` in interpret mode
+(tests/test_kernels.py sweeps shapes, gs, n_p and adversarial exponents).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def _rshift_round(v, e):
+    """(v + 2^(e-1)) >> e with e >= 0 (e may be traced)."""
+    e = jnp.asarray(e, jnp.int32)
+    bias = jnp.where(e > 0, jnp.left_shift(1, jnp.maximum(e - 1, 0)), 0)
+    return jnp.where(e > 0, jnp.right_shift(v + bias, e), v)
+
+
+def _quantize(v, e):
+    return jnp.clip(_rshift_round(v, e), INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def _dequantize(code, e):
+    return jnp.left_shift(code.astype(jnp.int32), jnp.asarray(e, jnp.int32))
+
+
+def _apsq_kernel(exp_ref, x_ref, w_ref, out_ref, banks_ref, *, n_p: int, gs: int):
+    """One grid step = one PSUM tile T_pk of one (i, j) output tile."""
+    k = pl.program_id(2)
+    prod = jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )  # int8 x int8 -> int32 on the MXU
+
+    if n_p == 1:
+        # Single PSUM tile: output quantization only (Algorithm 1 line 2).
+        out_ref[...] = _dequantize(_quantize(prod, exp_ref[0]), exp_ref[0])
+        return
+
+    last = n_p - 1
+    last_start = (last // gs) * gs
+
+    @pl.when(k == 0)
+    def _first():  # AP*_0 = Q_0(T_p0)
+        banks_ref[0] = _quantize(prod, exp_ref[0])
+
+    @pl.when((k > 0) & (k % gs == 0) & (k < last))
+    def _group_start():  # APSQ: fold the previous group's banks back in
+        acc = prod
+        for j in range(gs):  # bank j holds tile (k - gs + j)
+            acc = acc + _dequantize(banks_ref[j], exp_ref[k - gs + j])
+        banks_ref[0] = _quantize(acc, exp_ref[k])
+
+    @pl.when((k > 0) & (k % gs != 0) & (k < last))
+    def _tail():  # plain PSQ on a tail tile
+        code = _quantize(prod, exp_ref[k])
+        pl.store(banks_ref, (pl.dslice(k % gs, 1), slice(None), slice(None)),
+                 code[None])
+
+    @pl.when(k == last)
+    def _final():
+        # Statically known: which banks are live and their tile indices.
+        acc = prod
+        if last % gs == 0:  # final tile is itself a group start -> APSQ
+            if last > 0:
+                for j in range(gs):
+                    acc = acc + _dequantize(banks_ref[j], exp_ref[last - gs + j])
+        else:  # mid-group: fold the stored tiles since last_start
+            for l in range(last_start, last):
+                acc = acc + _dequantize(banks_ref[l - last_start], exp_ref[l])
+        out_ref[...] = _dequantize(_quantize(acc, exp_ref[last]), exp_ref[last])
+
+
+def _baseline_kernel(x_ref, w_ref, out_ref, acc_ref, *, n_p: int):
+    """INT32-accumulator W8A8 GEMM — the high-precision-PSUM baseline.
+
+    Identical grid/blocking, but the running PSUM is a [bm, bn] INT32 VMEM
+    scratch: 4 bytes/element, the paper's beta = 4 working set.
+    """
+    k = pl.program_id(2)
+    prod = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = prod
+
+    @pl.when(k > 0)
+    def _acc():
+        acc_ref[...] = acc_ref[...] + prod
+
+    @pl.when(k == n_p - 1)
+    def _out():
+        out_ref[...] = acc_ref[...] if n_p > 1 else prod
+
+
+def _compiler_params(n_dims: int):
+    """dimension_semantics: M/N parallel, K sequential (banks carry state)."""
+    sem = ("parallel",) * (n_dims - 1) + ("arbitrary",)
+    try:
+        return pltpu.CompilerParams(dimension_semantics=sem)
+    except AttributeError:  # older jax
+        return pltpu.TPUCompilerParams(dimension_semantics=sem)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gs", "block_m", "block_n", "n_p", "interpret"),
+)
+def apsq_matmul_kernel(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    exps: jax.Array,
+    *,
+    n_p: int,
+    gs: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """[M, K] int8 @ [K, N] int8 -> [M, N] int32 (product-scale units).
+
+    ``M % block_m == 0``, ``N % block_n == 0``, ``K % n_p == 0`` — the ops.py
+    wrapper pads.  ``exps`` is [n_p] int32, exponents >= 0.
+    """
+    m, kdim = x_codes.shape
+    n = w_codes.shape[1]
+    assert kdim % n_p == 0 and m % block_m == 0 and n % block_n == 0
+    block_k = kdim // n_p
+
+    grid = (m // block_m, n // block_n, n_p)
+    return pl.pallas_call(
+        functools.partial(_apsq_kernel, n_p=n_p, gs=gs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # exps: [n_p] scalars
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((gs, block_m, block_n), jnp.int8)],
+        compiler_params=_compiler_params(3),
+        interpret=interpret,
+    )(exps, x_codes, w_codes)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "n_p", "interpret")
+)
+def baseline_matmul_kernel(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    *,
+    n_p: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """INT32-accumulator W8A8 GEMM with the same grid/blocking as APSQ."""
+    m, kdim = x_codes.shape
+    n = w_codes.shape[1]
+    assert kdim % n_p == 0 and m % block_m == 0 and n % block_n == 0
+    block_k = kdim // n_p
+
+    grid = (m // block_m, n // block_n, n_p)
+    return pl.pallas_call(
+        functools.partial(_baseline_kernel, n_p=n_p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        compiler_params=_compiler_params(3),
+        interpret=interpret,
+    )(x_codes, w_codes)
+
+
+def accumulator_vmem_bytes(block_m: int, block_n: int, gs: int) -> dict:
+    """Accumulator working-set per output tile: APSQ banks vs INT32 baseline.
+
+    This is the co-design win on TPU: beta 4 -> gs/4 of the baseline bytes
+    (gs=1: 4x smaller; gs=4: parity in VMEM but still 4x fewer bytes per
+    HBM spill in split-K schedules, since only one bank is in flight).
+    """
+    return {
+        "apsq_banks": gs * block_m * block_n,          # gs INT8 banks
+        "baseline_int32": 4 * block_m * block_n,        # one INT32 accum
+    }

@@ -1,0 +1,132 @@
+"""Jit'd public wrappers around the APSQ Pallas kernel.
+
+Handles padding to block multiples, interpret-mode fallback on CPU, operand
+quantization from float, and rescaling of the integer result back to float.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import apsq_matmul_kernel, baseline_matmul_kernel
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def apsq_matmul_int8(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    exps: jax.Array,
+    *,
+    gs: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """INT8 GEMM with Algorithm-1 PSUM handling; returns INT32 [M, N].
+
+    ``n_p`` is taken from ``exps.shape[0]``; ``K % n_p`` must be 0 (the
+    PSUM tiling is exact, as in the paper's ``C_i`` multiple of ``P_ci``).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    m, k = x_codes.shape
+    n = w_codes.shape[1]
+    n_p = int(exps.shape[0])
+    if k % n_p:
+        raise ValueError(f"K={k} not divisible by n_p={n_p}")
+    bm, bn = min(block_m, _ceil_mult(m, 8)), min(block_n, _ceil_mult(n, 128))
+    xp = _pad_to(x_codes, bm, 1)
+    wp = _pad_to(w_codes, 1, bn)
+    out = apsq_matmul_kernel(
+        xp, wp, exps.astype(jnp.int32),
+        n_p=n_p, gs=int(gs), block_m=bm, block_n=bn, interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def baseline_matmul_int8(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    *,
+    n_p: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """INT32-accumulator W8A8 GEMM baseline; returns INT32 [M, N]."""
+    if interpret is None:
+        interpret = _default_interpret()
+    m, k = x_codes.shape
+    n = w_codes.shape[1]
+    if k % n_p:
+        raise ValueError(f"K={k} not divisible by n_p={n_p}")
+    bm, bn = min(block_m, _ceil_mult(m, 8)), min(block_n, _ceil_mult(n, 128))
+    xp = _pad_to(x_codes, bm, 1)
+    wp = _pad_to(w_codes, 1, bn)
+    out = baseline_matmul_kernel(
+        xp, wp, n_p=n_p, block_m=bm, block_n=bn, interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def _ceil_mult(x: int, mult: int) -> int:
+    """Smallest block size: full dim if < mult else mult (keeps grids tiny
+    for unit-test shapes while staying 128-aligned for real ones)."""
+    return x if x < mult else mult
+
+
+def quantize_operands(
+    x: jax.Array, w: jax.Array, *, ax: jax.Array | float, aw: jax.Array | float
+):
+    """Float activations/weights -> INT8 codes with scales ax (per-tensor)
+    and aw (per-tensor or per-column [N])."""
+    xq = jnp.clip(jnp.round(x / ax), -128, 127).astype(jnp.int8)
+    wq = jnp.clip(jnp.round(w / aw), -128, 127).astype(jnp.int8)
+    return xq, wq
+
+
+def apsq_matmul_f32(
+    x: jax.Array,
+    w: jax.Array,
+    exps: jax.Array,
+    *,
+    gs: int,
+    ax: jax.Array | float,
+    aw: jax.Array | float,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Deployment-path float entry: quantize -> integer kernel -> rescale.
+
+    Output scale is product-scale ``ax * aw`` (aw broadcasts per-column).
+    """
+    xq, wq = quantize_operands(x, w, ax=ax, aw=aw)
+    y = apsq_matmul_int8(
+        xq, wq, exps, gs=gs, block_m=block_m, block_n=block_n,
+        interpret=interpret,
+    )
+    return y.astype(jnp.float32) * jnp.asarray(ax, jnp.float32) * jnp.asarray(
+        aw, jnp.float32
+    )
+
+
+def calibrate_exps(
+    x_codes: jax.Array, w_codes: jax.Array, *, n_p: int, gs: int
+) -> jax.Array:
+    """Exponent calibration from a sample batch (see ref.choose_exps)."""
+    return ref.choose_exps(x_codes, w_codes, n_p=n_p, gs=gs)

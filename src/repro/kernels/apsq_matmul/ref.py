@@ -1,0 +1,122 @@
+"""Pure-jnp integer oracle for the APSQ matmul kernel.
+
+True-integer semantics of Algorithm 1 (paper §III), exactly as the
+Reconfigurable APSQ Engine (RAE) executes it in hardware and as the Pallas
+kernel executes it on TPU:
+
+  * activations / weights are INT8 codes; each K-tile product accumulates in
+    INT32 (the MXU's native int8xint8->int32 path),
+  * every stored PSUM is an INT8 code with a power-of-two scale ``2^e_i``
+    (in product-scale units), so quantization is an arithmetic right-shift
+    with round-half-up and dequantization is a left-shift — matching the
+    RAE's shifter-based quant/dequant modules,
+  * group starts apply APSQ (accumulate the previous group's dequantized
+    codes + the fresh product, then requantize), tails apply plain PSQ,
+  * the final tile is requantized once more and dequantized to INT32.
+
+All functions are shape-polymorphic jnp code (no Pallas) and serve as the
+bit-exact oracle for ``kernel.py`` in interpret mode and on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def rshift_round(v: jax.Array, e: jax.Array) -> jax.Array:
+    """Arithmetic right-shift by ``e`` with round-half-up (RAE shifter).
+
+    ``e`` may be 0 (identity).  Implemented as ``(v + 2^(e-1)) >> e`` which is
+    exact integer round-half-up toward +inf, the cheapest faithful rounding a
+    shift-based hardware quantizer implements.
+    """
+    v = v.astype(jnp.int32)
+    e = jnp.asarray(e, jnp.int32)
+    bias = jnp.where(e > 0, jnp.left_shift(1, jnp.maximum(e - 1, 0)), 0)
+    return jnp.where(e > 0, jnp.right_shift(v + bias, e), v)
+
+
+def quantize_psum(v: jax.Array, e: jax.Array) -> jax.Array:
+    """INT32 PSUM -> INT8 code at scale 2^e (shift + clip)."""
+    return jnp.clip(rshift_round(v, e), INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize_psum(code: jax.Array, e: jax.Array) -> jax.Array:
+    """INT8 code at scale 2^e -> INT32 value in product-scale units."""
+    return jnp.left_shift(code.astype(jnp.int32), jnp.asarray(e, jnp.int32))
+
+
+def psum_tiles(x_codes: jax.Array, w_codes: jax.Array, n_p: int) -> jax.Array:
+    """[n_p, M, N] INT32 partial-sum tiles of ``x @ w`` split along K."""
+    m, k = x_codes.shape
+    n = w_codes.shape[1]
+    assert k % n_p == 0, (k, n_p)
+    kt = k // n_p
+    xt = x_codes.reshape(m, n_p, kt).astype(jnp.int32)
+    wt = w_codes.reshape(n_p, kt, n).astype(jnp.int32)
+    return jnp.einsum("mpk,pkn->pmn", xt, wt)
+
+
+def apsq_matmul_ref(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    exps: jax.Array,
+    *,
+    n_p: int,
+    gs: int,
+) -> jax.Array:
+    """Oracle: INT8 x INT8 GEMM with Algorithm-1 PSUM handling.
+
+    x_codes: [M, K] int8, w_codes: [K, N] int8, exps: [n_p] int32 shift
+    exponents (product-scale units, >= 0).  Returns the dequantized output
+    tile as INT32 in product-scale units: ``T_o = AP*_{n_p-1} << e_{n_p-1}``.
+    """
+    assert gs >= 1
+    tiles = psum_tiles(x_codes, w_codes, n_p)
+    stored: list = [None] * n_p
+    for i in range(0, n_p, gs):  # group starts
+        acc = tiles[i]
+        for j in range(max(0, i - gs), i):  # previous group's stored codes
+            acc = acc + dequantize_psum(stored[j], exps[j])
+        code = quantize_psum(acc, exps[i])  # APSQ
+        stored[i] = code
+        if i == n_p - 1:
+            return dequantize_psum(code, exps[i])
+        for j in range(i + 1, min(i + gs, n_p)):
+            if j < n_p - 1:
+                stored[j] = quantize_psum(tiles[j], exps[j])  # PSQ tail
+            else:  # final tile closes out mid-group
+                acc = tiles[j]
+                for l in range(i, n_p - 1):
+                    acc = acc + dequantize_psum(stored[l], exps[l])
+                code = quantize_psum(acc, exps[j])
+                return dequantize_psum(code, exps[j])
+    raise AssertionError("unreachable")
+
+
+def baseline_matmul_ref(x_codes: jax.Array, w_codes: jax.Array) -> jax.Array:
+    """INT32-accumulator W8A8 GEMM (the high-precision-PSUM baseline)."""
+    return jax.lax.dot_general(
+        x_codes.astype(jnp.int32),
+        w_codes.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def choose_exps(
+    x_codes: jax.Array, w_codes: jax.Array, *, n_p: int, gs: int
+) -> jax.Array:
+    """Calibration helper: per-tile exponents from running-PSUM magnitudes.
+
+    Mirrors ``core.layers.calibrate_dense`` in integer domain: exponent e_i
+    is the smallest shift such that the running accumulation the quantizer
+    actually sees fits INT8.  Used by tests and by ``ops.quantize_operands``.
+    """
+    tiles = psum_tiles(x_codes, w_codes, n_p)
+    running = jnp.cumsum(tiles, axis=0)  # upper bound on any AP_i magnitude
+    mags = jnp.max(jnp.abs(running), axis=(1, 2))
+    exps = jnp.ceil(jnp.log2(jnp.maximum(mags, 1) / INT8_MAX)).astype(jnp.int32)
+    return jnp.maximum(exps, 0)

@@ -1,0 +1,16 @@
+"""INT8 KV-cache decode attention (PO2 shift scales) — Pallas kernel."""
+from .kernel import int8_kv_attention_kernel
+from .ops import cache_bytes, int8_kv_attention, int8_kv_attention_f32
+from .ref import (
+    dequantize_kv_po2,
+    fp_attention_ref,
+    int8_kv_attention_ref,
+    quantize_kv_po2,
+)
+
+__all__ = [
+    "cache_bytes", "dequantize_kv_po2", "fp_attention_ref",
+    "int8_kv_attention", "int8_kv_attention_f32",
+    "int8_kv_attention_kernel", "int8_kv_attention_ref",
+    "quantize_kv_po2",
+]

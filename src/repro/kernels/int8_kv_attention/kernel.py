@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: decode attention over an INT8 KV cache (PO2 scales).
+
+Decode attention is HBM-bandwidth-bound (every decode cell in §Roofline):
+the whole KV cache streams through the chip once per token.  Storing the
+cache as INT8 codes with power-of-two per-(batch, head) scales halves the
+streamed bytes; the dequantization is a multiply by 2^e folded into the
+score scale (the RAE shifter argument of §II-B, applied to serving).
+
+Grid: ``(B, Hkv, S / block_s)`` — batch and kv-head parallel, the KV
+sequence dimension sequential with an online-softmax VMEM scratch carry
+(m, l, acc), exactly the flash-decode structure:
+
+  * q tile  [G, hd]          VMEM (fp32)
+  * k tile  [block_s, hd]    VMEM (int8)   <- the bandwidth win
+  * v tile  [block_s, hd]    VMEM (int8)
+  * exps    SMEM scalars (shift exponents per (b, h))
+  * scratch m [G], l [G], acc [G, hd] fp32
+
+Validated against ``ref.int8_kv_attention_ref`` in interpret mode
+(tests/test_kernels_kv.py) and within quantization tolerance of the fp32
+attention reference.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kv_attn_kernel(kexp_ref, vexp_ref, len_ref, q_ref, k_ref, v_ref,
+                    out_ref, m_ref, l_ref, acc_ref, *,
+                    n_blocks: int, block_s: int, scale: float):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                       # [G, hd] fp32
+    k = k_ref[0, :, 0].astype(jnp.float32)  # [block_s, hd] int8 codes
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    k_scale = jnp.exp2(kexp_ref[b, h].astype(jnp.float32))
+    v_scale = jnp.exp2(vexp_ref[b, h].astype(jnp.float32))
+
+    # scores over codes; the PO2 dequant folds into the softmax scale.
+    sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    sc = sc * (scale * k_scale)           # [G, block_s]
+    pos = s * block_s + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+    sc = jnp.where(pos < len_ref[b], sc, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(sc, axis=1))
+    p = jnp.exp(sc - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv * v_scale
+    m_ref[...] = m_new
+
+    @pl.when(s == n_blocks - 1)
+    def _done():
+        out_ref[0, 0] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)[:, None])
+
+
+def _compiler_params():
+    sem = ("parallel", "parallel", "arbitrary")
+    try:
+        return pltpu.CompilerParams(dimension_semantics=sem)
+    except AttributeError:  # older jax
+        return pltpu.TPUCompilerParams(dimension_semantics=sem)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_s", "interpret"))
+def int8_kv_attention_kernel(
+    q: jax.Array,        # [B, Hq, hd] fp32
+    k_codes: jax.Array,  # [B, S, Hkv, hd] int8
+    v_codes: jax.Array,  # [B, S, Hkv, hd] int8
+    k_exp: jax.Array,    # [B, Hkv] int32
+    v_exp: jax.Array,    # [B, Hkv] int32
+    length: jax.Array,   # [B] int32 valid cache length
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, Hkv, hd = k_codes.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    assert S % block_s == 0, (S, block_s)
+    n_blocks = S // block_s
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    grid = (B, Hkv, n_blocks)
+    out = pl.pallas_call(
+        functools.partial(_kv_attn_kernel, n_blocks=n_blocks,
+                          block_s=block_s, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # k_exp
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # v_exp
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # length
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(k_exp, v_exp, length, qr, k_codes, v_codes)
+    return out.reshape(B, Hq, hd)

@@ -1,0 +1,326 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the placeholder device count before ANY jax import (jax locks the
+device count at first init) — hence the first two lines.
+
+For each cell the driver builds the jitted step (train_step for train
+shapes, prefill/serve_step for inference shapes), lowers it with
+ShapeDtypeStruct inputs (no allocation), compiles, and records:
+
+  * memory_analysis()  — proves the program fits per-device HBM,
+  * cost_analysis()    — FLOPs / bytes for the roofline (§Roofline),
+  * collective bytes   — parsed from the optimized HLO,
+  * the three roofline terms + dominant bottleneck.
+
+Reports land in ``experiments/dryrun/<arch>__<cell>__<mesh>.json`` and are
+aggregated into EXPERIMENTS.md by ``benchmarks/roofline_table.py``.
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:  # first lines, before any jax import
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, cells_for, get_config
+from repro.dist import batch_spec, tree_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import ModelConfig, ShapeCell
+from repro.models.model import (
+    decode_step,
+    decode_state_specs,
+    forward,
+    init_decode_state,
+    init_lm,
+    lm_specs,
+)
+from repro.optim import OptimConfig, init_opt_state
+from repro.roofline import analyze_hlo, cost_terms, model_flops, V5E
+from repro.train import TrainConfig, make_train_step, shardings_for_training
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Per-arch tuning defaults (microbatching keeps train activations in HBM)
+# ---------------------------------------------------------------------------
+
+def default_microbatches(cfg: ModelConfig, cell: ShapeCell) -> int:
+    if cell.kind != "train":
+        return 1
+    # Saved residual per unit ~ B*S*d*2 bytes / data shards; keep the
+    # scan-carry footprint ~<2 GB/device across n_units.
+    return 8 if cfg.d_model >= 2048 else 4
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Active parameters per token (MoE: only top_k experts count)."""
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    total = sum(math.prod(s.shape) for s in jax.tree.leaves(shapes))
+    if cfg.mlp == "moe":
+        expert = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts * cfg.n_layers
+        active = expert * cfg.top_k // cfg.n_experts
+        total = total - expert + active
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    B, S = cell.global_batch, cell.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    if cell.kind == "train":
+        batch = {"tokens": SDS((B, S), i32), "labels": SDS((B, S), i32)}
+        if cfg.frontend == "vision":
+            batch["embeds"] = SDS((B, cfg.n_frontend_tokens, cfg.d_model),
+                                  f32)
+        if cfg.encdec:
+            batch["enc_embeds"] = SDS((B, S, cfg.d_model), f32)
+        return batch
+    if cell.kind == "prefill":
+        batch = {"tokens": SDS((B, S), i32)}
+        if cfg.frontend == "vision":
+            batch["embeds"] = SDS((B, cfg.n_frontend_tokens, cfg.d_model),
+                                  f32)
+        if cfg.encdec:
+            batch["enc_embeds"] = SDS((B, S, cfg.d_model), f32)
+        return batch
+    # decode: one new token against a cache of S
+    state_shapes = jax.eval_shape(
+        partial(init_decode_state, cfg, B, S))
+    batch = {
+        "token": SDS((B, 1), i32),
+        "pos": SDS((), i32),
+        "state": state_shapes,
+    }
+    if cfg.encdec:
+        batch["enc_out"] = SDS((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# step builders (fn, arg specs, in/out shardings)
+# ---------------------------------------------------------------------------
+
+def _batch_shardings(specs: dict, mesh, batch: int):
+    out = {}
+    for k, v in specs.items():
+        out[k] = NamedSharding(mesh, batch_spec(mesh, batch,
+                                                extra_dims=len(v.shape) - 1))
+    return out
+
+
+def build_train(cfg: ModelConfig, cell: ShapeCell, mesh, *,
+                microbatches: int | None = None, compress: bool = False,
+                zero1: bool = True, remat_policy: str | None = None,
+                rules=None):
+    if remat_policy is not None:
+        cfg = dataclasses.replace(cfg, remat_policy=remat_policy)
+    ocfg = OptimConfig()
+    tcfg = TrainConfig(
+        microbatches=microbatches or default_microbatches(cfg, cell),
+        compress_dcn_grads=compress, zero1=zero1)
+    step = make_train_step(cfg, ocfg, tcfg, mesh)
+    p_sh, o_sh, p_shapes, o_shapes = shardings_for_training(
+        cfg, ocfg, mesh, zero1=zero1, rules=rules)
+    bspecs = input_specs(cfg, cell)
+    b_sh = _batch_shardings(bspecs, mesh, cell.global_batch)
+    args = (p_shapes, o_shapes, bspecs)
+    in_sh = (p_sh, o_sh, b_sh)
+    out_sh = (p_sh, o_sh, None)
+    return step, args, in_sh, out_sh
+
+
+def build_prefill(cfg: ModelConfig, cell: ShapeCell, mesh, rules=None):
+    # params are an explicit input (sharded weights)
+    def step(params, batch):
+        logits = forward(params, cfg, batch["tokens"],
+                         embeds=batch.get("embeds"),
+                         enc_embeds=batch.get("enc_embeds"), mesh=mesh)
+        return logits[:, -1:, :]
+
+    p_shapes = jax.eval_shape(lambda k: init_lm(k, cfg),
+                              jax.random.PRNGKey(0))
+    p_specs = tree_specs(lm_specs(cfg), p_shapes, mesh, rules)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+    bspecs = input_specs(cfg, cell)
+    b_sh = _batch_shardings(bspecs, mesh, cell.global_batch)
+    return step, (p_shapes, bspecs), (p_sh, b_sh), None
+
+
+def build_decode(cfg: ModelConfig, cell: ShapeCell, mesh, rules=None):
+    def step(params, batch):
+        logits, new_state = decode_step(
+            params, cfg, batch["state"], batch["token"], batch["pos"],
+            enc_out=batch.get("enc_out"), mesh=mesh)
+        return logits, new_state
+
+    p_shapes = jax.eval_shape(lambda k: init_lm(k, cfg),
+                              jax.random.PRNGKey(0))
+    p_specs = tree_specs(lm_specs(cfg), p_shapes, mesh, rules)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+
+    bspecs = input_specs(cfg, cell)
+    st_specs = tree_specs(decode_state_specs(cfg), bspecs["state"], mesh,
+                          rules)
+    st_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), st_specs)
+    b_sh = {
+        "token": NamedSharding(mesh, batch_spec(mesh, cell.global_batch, 1)),
+        "pos": NamedSharding(mesh, P()),
+        "state": st_sh,
+    }
+    if "enc_out" in bspecs:
+        b_sh["enc_out"] = NamedSharding(
+            mesh, batch_spec(mesh, cell.global_batch, 2))
+    return step, (p_shapes, bspecs), (p_sh, b_sh), (None, st_sh)
+
+
+def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh, rules=None, **kw):
+    if cell.kind == "train":
+        return build_train(cfg, cell, mesh, rules=rules, **kw)
+    if cell.kind == "prefill":
+        return build_prefill(cfg, cell, mesh, rules=rules)
+    return build_decode(cfg, cell, mesh, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile + analyze one cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, cell_name: str, *, multi_pod: bool = False,
+             quant: str = "none", verbose: bool = True,
+             overrides: dict | None = None, tag: str = "",
+             rules=None, **kw) -> dict:
+    cfg = get_config(arch, quant=quant)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = cells_for(arch)[cell_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = math.prod(mesh.devices.shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    report = {"arch": arch, "cell": cell_name, "mesh": mesh_name,
+              "quant": quant, "tag": tag, "ok": False,
+              "overrides": {k: str(v) for k, v in (overrides or {}).items()}}
+    t0 = time.time()
+    try:
+        step, args, in_sh, out_sh = build_cell(cfg, cell, mesh, rules=rules,
+                                               **kw)
+        with mesh:
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        report["compile_s"] = round(time.time() - t0, 1)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    report[k] = int(v)
+        # Loop-aware HLO cost (cost_analysis() counts while bodies once).
+        hlo = analyze_hlo(compiled.as_text())
+        terms = cost_terms(
+            {"flops": hlo["flops"], "bytes accessed": hlo["bytes"]},
+            hlo["collectives"], n_chips)
+        report.update(terms)
+        report["collectives"] = hlo["collectives"]
+        report["collective_counts"] = hlo["collective_counts"]
+        report["hlo_warnings"] = hlo["warnings"][:10]
+        xla_cost = compiled.cost_analysis()
+        xla_cost = (xla_cost[0] if isinstance(xla_cost, (list, tuple))
+                    else xla_cost) or {}
+        report["xla_flops_unscaled"] = float(xla_cost.get("flops", 0.0))
+
+        n_act = active_params(cfg)
+        tokens = (cell.global_batch * cell.seq_len
+                  if cell.kind in ("train", "prefill")
+                  else cell.global_batch)
+        mf = model_flops(n_act, tokens, training=(cell.kind == "train"))
+        report["model_flops_global"] = mf
+        report["model_flops_per_chip"] = mf / n_chips
+        if terms["flops"]:
+            report["useful_flops_fraction"] = (
+                mf / n_chips / terms["flops"])
+        report["ok"] = True
+    except Exception as e:  # noqa: BLE001 — report every failure mode
+        report["error"] = f"{type(e).__name__}: {e}"
+        report["traceback"] = traceback.format_exc()[-2000:]
+    if verbose:
+        status = "OK " if report["ok"] else "FAIL"
+        extra = (f"dom={report.get('dominant', '?'):>12s} "
+                 f"comp={report.get('compute_s', 0):.3e}s "
+                 f"mem={report.get('memory_s', 0):.3e}s "
+                 f"coll={report.get('collective_s', 0):.3e}s"
+                 if report["ok"] else report.get("error", ""))
+        print(f"[dryrun] {status} {arch:24s} {cell_name:12s} "
+              f"{mesh_name:8s} {report.get('compile_s', 0):6.1f}s  {extra}",
+              flush=True)
+    return report
+
+
+def save_report(report: dict, out_dir: str = "experiments/dryrun"):
+    os.makedirs(out_dir, exist_ok=True)
+    tag = report.get("tag") or ""
+    name = (f"{report['arch']}__{report['cell']}__{report['mesh']}"
+            f"__{report.get('quant', 'none')}"
+            + (f"__{tag}" if tag else "") + ".json")
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump({k: v for k, v in report.items() if k != "traceback"},
+                  f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--cell", default="all",
+                    help="shape cell or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--quant", default="none",
+                    choices=("none", "w8a8", "psq", "apsq"))
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--compress", action="store_true",
+                    help="INT8 DCN gradient compression (multi-pod train)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if args.arch == "all" else (args.arch,)
+    meshes = {"single": (False,), "multi": (True,),
+              "both": (False, True)}[args.mesh]
+    failures = 0
+    for arch in archs:
+        cell_names = (cells_for(arch) if args.cell == "all"
+                      else (args.cell,))
+        for cell_name in cell_names:
+            if cell_name not in cells_for(arch):
+                print(f"[dryrun] SKIP {arch} {cell_name} (inapplicable)")
+                continue
+            for mp in meshes:
+                kw = {}
+                if cell_name.startswith("train"):
+                    kw = {"microbatches": args.microbatches,
+                          "compress": args.compress}
+                rep = run_cell(arch, cell_name, multi_pod=mp,
+                               quant=args.quant, **kw)
+                save_report(rep, args.out)
+                failures += 0 if rep["ok"] else 1
+    print(f"[dryrun] done; {failures} failures")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

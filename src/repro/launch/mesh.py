@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax initialization).
+
+  single pod : (16, 16)       axes ("data", "model")   = 256 chips
+  multi-pod  : (2, 16, 16)    axes ("pod", "data", "model") = 512 chips
+
+The "pod" axis is the DCN (data-center network) dimension; "data" and
+"model" are ICI axes within one pod.  Gradient compression and ZeRO-1
+moment sharding target "pod" (see repro.dist).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,255 @@
+"""Shared building blocks for the model zoo.
+
+Every projection GEMM funnels through ``dense`` -> ``repro.core.quant_dense``
+so W8A8 + PSUM quantization (PSQ/APSQ, any gs) is a pure config change on
+any architecture — the paper's technique as a first-class framework feature.
+
+Params are plain pytrees (dicts of arrays).  For every ``init_*`` function
+there is a parallel ``*_specs`` function returning *logical axis names* per
+param (same tree structure); ``repro.dist.sharding`` maps logical names to
+mesh axes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig, quant_dense, quant_params_init
+
+Params = dict
+P = jax.sharding.PartitionSpec
+
+
+# ---------------------------------------------------------------------------
+# Linear / norms / embeddings
+# ---------------------------------------------------------------------------
+
+def init_linear(key, shape, dtype, scale: float | None = None,
+                quant: QuantConfig | None = None) -> Params:
+    """Linear weight with fan-in init; optional quantizer state.
+
+    ``shape`` is (K, *out_dims): the first axis is the reduction dim.
+    """
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    w = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    p = {"w": w}
+    if quant is not None and quant.enabled:
+        p["qp"] = quant_params_init(w.reshape(shape[0], -1).astype(jnp.float32),
+                                    quant)
+    return p
+
+
+def linear_specs(logical: tuple, quant: QuantConfig | None = None) -> Params:
+    """Logical-axis names matching ``init_linear``'s tree."""
+    s = {"w": logical}
+    if quant is not None and quant.enabled:
+        s["qp"] = {"aw": (logical[-1],) if False else (None,),
+                   "ax": (), "ap": (None,)}
+        # per-channel aw is 1-D over flattened out dims -> replicated
+        s["qp"]["aw"] = (None,)
+    return s
+
+
+def dense(p: Params, x: jax.Array, quant: QuantConfig | None) -> jax.Array:
+    """x[..., K] @ w[K, *out] with optional W8A8/APSQ fake quant."""
+    w = p["w"]
+    if quant is None or not quant.enabled or "qp" not in p:
+        y = jax.lax.dot_general(
+            x, w.reshape(w.shape[0], -1).astype(x.dtype),
+            (((x.ndim - 1,), (0,)), ((), ())),
+        )
+        return y.reshape(x.shape[:-1] + w.shape[1:])
+    w2d = w.reshape(w.shape[0], -1)
+    y = quant_dense(x, w2d, p["qp"], quant)
+    return y.reshape(x.shape[:-1] + w.shape[1:])
+
+
+def init_norm(dim: int, dtype, kind: str = "rmsnorm") -> Params:
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def norm_specs(kind: str = "rmsnorm") -> Params:
+    s = {"scale": ("norm",)}
+    if kind == "layernorm":
+        s["bias"] = ("norm",)
+    return s
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str = "rmsnorm",
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (xf * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mean) * jax.lax.rsqrt(var + eps)
+    out = xf * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, dim: int, dtype) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, dim), jnp.float32)
+                      * (1.0 / math.sqrt(dim))).astype(dtype)}
+
+
+def embedding_specs() -> Params:
+    # "vocab_in" (not "vocab"): the input table's gather pattern interacts
+    # badly with some SPMD passes, so rules can replicate it independently
+    # of the output head.
+    return {"table": ("vocab_in", "embed")}
+
+
+# ---------------------------------------------------------------------------
+# RoPE (incl. the partial/2d variant ChatGLM3 uses)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float):
+    """Inverse frequencies for the rotary-embedded slice of the head."""
+    rot_dim = int(head_dim * fraction)
+    rot_dim -= rot_dim % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32)
+                           / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, fraction: float = 1.0,
+               theta: float = 10000.0) -> jax.Array:
+    """Rotary position embedding on the leading ``fraction`` of head dims.
+
+    x: [..., S, H, head_dim]; positions: broadcastable to [..., S].
+    ``fraction=0.5`` reproduces ChatGLM3's 2D-RoPE layout (rotary on the
+    first half of the head, pass-through on the second half).
+    """
+    head_dim = x.shape[-1]
+    inv, rot_dim = rope_frequencies(head_dim, fraction, theta)
+    if rot_dim == 0:
+        return x
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, rot/2]
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1 = xr[..., 0::2].astype(jnp.float32)
+    x2 = xr[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if xp.shape[-1] else out
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, kind: str = "swiglu",
+             quant: QuantConfig | None = None) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "wi": init_linear(k1, (d_model, d_ff), dtype, quant=quant),
+            "wg": init_linear(k2, (d_model, d_ff), dtype, quant=quant),
+            "wo": init_linear(k3, (d_ff, d_model), dtype, quant=quant),
+        }
+    return {  # gelu MLP (BERT / StarCoder2 style)
+        "wi": init_linear(k1, (d_model, d_ff), dtype, quant=quant),
+        "wo": init_linear(k3, (d_ff, d_model), dtype, quant=quant),
+    }
+
+
+def mlp_specs(kind: str = "swiglu", quant: QuantConfig | None = None) -> Params:
+    s = {"wi": linear_specs(("embed", "ff"), quant),
+         "wo": linear_specs(("ff", "embed"), quant)}
+    if kind == "swiglu":
+        s["wg"] = linear_specs(("embed", "ff"), quant)
+    return s
+
+
+def apply_mlp(p: Params, x: jax.Array, kind: str = "swiglu",
+              quant: QuantConfig | None = None) -> jax.Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(p["wg"], x, quant)) * dense(p["wi"], x, quant)
+    else:
+        h = jax.nn.gelu(dense(p["wi"], x, quant))
+    return dense(p["wo"], h, quant)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def shard_hint(x: jax.Array, spec) -> jax.Array:
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def batch_axes_for(mesh, batch: int):
+    """Mesh axes for the activation batch dim (divisibility-checked)."""
+    if mesh is None:
+        return None
+    for axes in (("pod", "data"), ("data",)):
+        if all(a in mesh.axis_names for a in axes):
+            size = math.prod(mesh.shape[a] for a in axes)
+            if batch % size == 0:
+                return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def heads_axis_for(mesh, n: int):
+    """"model" when it divides the head/feature count, else replicate."""
+    if (mesh is not None and "model" in mesh.axis_names
+            and n % mesh.shape["model"] == 0):
+        return "model"
+    return None
+
+
+def act_spec_seq(mesh, batch: int, seq: int, n_trailing: int = 1):
+    """Sequence-parallel constraint [B, S, ...]: S over "model".
+
+    For attention-free regions (RWKV ddlerp, norms) whose head count does
+    not divide the model axis, sharding the *sequence* over "model" keeps
+    the elementwise work and its gradients 1/TP per chip instead of
+    replicated (Megatron-SP adapted).
+    """
+    if mesh is None:
+        return None
+    b = batch_axes_for(mesh, batch)
+    s = heads_axis_for(mesh, seq)  # "model" iff divisible
+    return jax.sharding.NamedSharding(
+        mesh, P(b, s, *([None] * n_trailing)))
+
+
+def act_spec(mesh, batch: int, *, heads: int | None = None,
+             feat: int | None = None):
+    """Activation sharding constraint (NamedSharding; mesh-explicit).
+
+    [B, S, H, hd] (heads=H)  -> P(batch, None, model?, None)
+    [B, S, F]     (feat=F)   -> P(batch, None, model?)   (logits etc.)
+    [B, S, D]     (neither)  -> P(batch, None, None)
+    """
+    if mesh is None:
+        return None
+    b = batch_axes_for(mesh, batch)
+    if heads is not None:
+        spec = P(b, None, heads_axis_for(mesh, heads), None)
+    elif feat is not None:
+        spec = P(b, None, heads_axis_for(mesh, feat))
+    else:
+        spec = P(b, None, None)
+    return jax.sharding.NamedSharding(mesh, spec)
+
+
+def count_params(params: Any) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params)
+               if hasattr(p, "size"))

@@ -1,0 +1,126 @@
+"""ModelConfig — one dataclass describing every architecture in the zoo.
+
+An architecture is a repeating ``block_pattern`` of time-mix kinds
+("attn" | "local" | "rwkv" | "rglru") with a channel mix chosen by ``mlp``
+("swiglu" | "gelu" | "moe" | "rwkv_cm"), plus embeddings / heads / optional
+encoder stack and modality frontend stubs.  The paper's technique rides on
+``quant`` (W8A8 + PSQ/APSQ on every projection GEMM).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+
+BLOCK_KINDS = ("attn", "local", "rwkv", "rglru")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense|moe|ssm|hybrid|encdec|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    mlp: str = "swiglu"               # swiglu | gelu | moe | rwkv_cm
+    block_pattern: tuple = ("attn",)
+    rope_fraction: float = 1.0
+    rope_theta: float = 10000.0
+    local_window: int = 2048
+    softcap: float | None = None
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # RWKV
+    wkv_impl: str = "scan"            # scan | chunked  (§Perf)
+    wkv_chunk: int = 32               # chunk length for the chunked WKV
+    # RG-LRU
+    d_rnn: int | None = None
+    # encoder-decoder (seamless)
+    encdec: bool = False
+    n_enc_layers: int = 0
+    # modality frontend stub: precomputed embeddings are model inputs
+    frontend: str | None = None       # audio | vision
+    n_frontend_tokens: int = 0
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    remat: bool = True
+    remat_policy: str = "none"        # none | dots  ("none" = save nothing)
+    scan_layers: bool = True          # False: python-unrolled units (QAT
+                                      # calibration taps, tiny models)
+    # attention chunking (flash-style); tuned per shape by the launcher
+    chunk_q: int = 512
+    chunk_kv: int = 1024
+    # loss
+    z_loss: float = 0.0
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pattern_kinds(self) -> tuple:
+        return tuple(self.block_pattern)
+
+    @property
+    def n_units(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def n_rem(self) -> int:
+        return self.n_layers % len(self.block_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if no full-attention layer exists (long_500k eligibility)."""
+        return all(k in ("rwkv", "rglru", "local") for k in self.block_pattern)
+
+    def with_quant(self, quant: QuantConfig) -> "ModelConfig":
+        return dataclasses.replace(self, quant=quant)
+
+    def scaled(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def validate(self):
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0
+        for k in self.block_pattern:
+            assert k in BLOCK_KINDS, k
+        if self.mlp == "moe":
+            assert self.n_experts > 0 and self.top_k > 0
+        if "rglru" in self.block_pattern:
+            assert self.d_rnn is not None
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (input-shape) cell: what gets lowered in the dry-run."""
+    name: str            # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+    @property
+    def is_serving(self) -> bool:
+        return self.kind in ("prefill", "decode")
+
+
+SHAPE_CELLS = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,561 @@
+"""Full-model assembly: decoder-only LMs, encoder-decoder, modality stubs.
+
+An architecture is a repeating ``block_pattern`` of time-mix kinds
+(attn | local | rwkv | rglru) with one channel mix (swiglu | gelu | moe |
+rwkv_cm).  Full layers = ``n_units`` repeats of the pattern (stacked params,
+``lax.scan`` over units, optional remat) + ``n_rem`` unstacked remainder
+layers.  Every GEMM goes through ``dense`` so the paper's APSQ applies to
+any architecture via ``cfg.quant``.
+
+Three entry points per model:
+  * ``forward``        — training / one-shot prefill; returns logits (and,
+    when ``collect_cache`` is set, per-layer decode states for serving).
+  * ``decode_step``    — one token with per-layer caches/recurrent states.
+  * ``init_lm`` / ``lm_specs`` / ``init_decode_state`` — params, logical
+    sharding specs (same tree), fresh decode state.
+
+Modality stubs (assignment rule): ``[audio]``/``[vlm]`` archs take
+precomputed frame/patch embeddings as inputs; there is no conv/ViT stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+from .common import (
+    Params,
+    apply_norm,
+    dense,
+    init_embedding,
+    init_linear,
+    init_mlp,
+    init_norm,
+    apply_mlp,
+    embedding_specs,
+    linear_specs,
+    mlp_specs,
+    norm_specs,
+)
+from .attention import (
+    attention_block,
+    attention_specs,
+    init_attention,
+)
+from .moe import init_moe, moe_ffn, moe_ffn_sharded, moe_specs
+from .rwkv import (
+    init_rwkv_channel_mix,
+    init_rwkv_state,
+    init_rwkv_time_mix,
+    rwkv_channel_mix,
+    rwkv_channel_mix_specs,
+    rwkv_time_mix,
+    rwkv_time_mix_specs,
+)
+from .rglru import (
+    init_rglru_block,
+    init_rglru_state,
+    rglru_block,
+    rglru_block_specs,
+)
+from .config import ModelConfig
+
+SPEC_LEAF = lambda x: isinstance(x, tuple)  # logical-axis tuples are leaves
+
+
+def tmap(f, *trees):
+    """tree.map with logical-axis tuples treated as leaves."""
+    return jax.tree.map(f, *trees, is_leaf=SPEC_LEAF)
+
+
+# ---------------------------------------------------------------------------
+# One layer (time mix + channel mix, pre-norm residual)
+# ---------------------------------------------------------------------------
+
+def _init_ffn(key, cfg: ModelConfig, quant):
+    if cfg.mlp == "moe":
+        return init_moe(key, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                        cfg.top_k, cfg.jdtype, quant=quant)
+    if cfg.mlp == "rwkv_cm":
+        return init_rwkv_channel_mix(key, cfg.d_model, cfg.d_ff, cfg.jdtype,
+                                     quant=quant)
+    return init_mlp(key, cfg.d_model, cfg.d_ff, cfg.jdtype, kind=cfg.mlp,
+                    quant=quant)
+
+
+def _ffn_specs(cfg: ModelConfig, quant):
+    if cfg.mlp == "moe":
+        return moe_specs(quant)
+    if cfg.mlp == "rwkv_cm":
+        return rwkv_channel_mix_specs(quant)
+    return mlp_specs(cfg.mlp, quant)
+
+
+def init_layer(key, cfg: ModelConfig, kind: str, cross: bool = False) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    quant = cfg.quant if cfg.quant.enabled else None
+    p: Params = {"ln1": init_norm(cfg.d_model, cfg.jdtype, cfg.norm),
+                 "ln2": init_norm(cfg.d_model, cfg.jdtype, cfg.norm)}
+    if kind in ("attn", "local"):
+        p["mix"] = init_attention(k1, cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.hd, cfg.jdtype,
+                                  quant=quant)
+    elif kind == "rwkv":
+        p["mix"] = init_rwkv_time_mix(k1, cfg.d_model, cfg.n_heads, cfg.hd,
+                                      cfg.jdtype, quant=quant)
+    elif kind == "rglru":
+        p["mix"] = init_rglru_block(k1, cfg.d_model, cfg.d_rnn, cfg.jdtype,
+                                    quant=quant)
+    else:
+        raise ValueError(kind)
+    p["ffn"] = _init_ffn(k2, cfg, quant)
+    if cross:
+        p["lnx"] = init_norm(cfg.d_model, cfg.jdtype, cfg.norm)
+        p["xattn"] = init_attention(k3, cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.hd, cfg.jdtype,
+                                    quant=quant)
+    return p
+
+
+def layer_specs(cfg: ModelConfig, kind: str, cross: bool = False) -> Params:
+    quant = cfg.quant if cfg.quant.enabled else None
+    s: Params = {"ln1": norm_specs(cfg.norm), "ln2": norm_specs(cfg.norm)}
+    if kind in ("attn", "local"):
+        s["mix"] = attention_specs(quant)
+    elif kind == "rwkv":
+        s["mix"] = rwkv_time_mix_specs(quant)
+    elif kind == "rglru":
+        s["mix"] = rglru_block_specs(quant)
+    s["ffn"] = _ffn_specs(cfg, quant)
+    if cross:
+        s["lnx"] = norm_specs(cfg.norm)
+        s["xattn"] = attention_specs(quant)
+    return s
+
+
+def init_layer_state(cfg: ModelConfig, kind: str, batch: int,
+                     cache_len: int) -> Params:
+    """Fresh decode state for one layer of the given kind."""
+    if kind == "attn":
+        shape = (batch, cache_len, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, cfg.jdtype),
+                "v": jnp.zeros(shape, cfg.jdtype)}
+    if kind == "local":
+        shape = (batch, min(cfg.local_window, cache_len),
+                 cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, cfg.jdtype),
+                "v": jnp.zeros(shape, cfg.jdtype)}
+    if kind == "rwkv":
+        return init_rwkv_state(batch, cfg.d_model, cfg.n_heads, cfg.hd,
+                               dtype=cfg.jdtype)
+    if kind == "rglru":
+        return {"rec": init_rglru_state(batch, cfg.d_rnn, dtype=cfg.jdtype)}
+    raise ValueError(kind)
+
+
+def apply_layer(
+    p: Params,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    kind: str,
+    mesh=None,
+    state: Params | None = None,
+    pos: jax.Array | int = 0,
+    enc_out: jax.Array | None = None,
+    causal: bool = True,
+):
+    """One pre-norm block.  ``state`` not None => decode (single token).
+
+    Returns (x, new_state); new_state is None when training without cache.
+    """
+    # (§Perf it4, refuted: an explicit seq-shard constraint on the
+    # residual stream added reshards — GSPMD already propagates SP from
+    # the ddlerp/rglru hints.  Left unconstrained.)
+    quant = cfg.quant if cfg.quant.enabled else None
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    new_state: Params = {}
+
+    if kind in ("attn", "local"):
+        window = cfg.local_window if kind == "local" else None
+        cache = ({"k": state["k"], "v": state["v"]}
+                 if state is not None else None)
+        out, kv = attention_block(
+            p["mix"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope_fraction=cfg.rope_fraction,
+            rope_theta=cfg.rope_theta, causal=causal, window=window,
+            softcap=cfg.softcap, quant=quant, cache=cache, pos=pos,
+            mesh=mesh)
+        new_state = kv
+    elif kind == "rwkv":
+        out, tm_state = rwkv_time_mix(
+            p["mix"], h, n_heads=cfg.n_heads, head_dim=cfg.hd, quant=quant,
+            impl=cfg.wkv_impl, wkv_chunk=cfg.wkv_chunk, mesh=mesh,
+            state=state["tm"] if state is not None else None)
+        new_state = {"tm": tm_state}
+    elif kind == "rglru":
+        out, rec_state = rglru_block(
+            p["mix"], h, quant=quant, mesh=mesh,
+            state=state["rec"] if state is not None else None)
+        new_state = {"rec": rec_state}
+    else:
+        raise ValueError(kind)
+    x = x + out
+
+    if "xattn" in p and enc_out is not None:
+        hx = apply_norm(p["lnx"], x, cfg.norm)
+        outx, _ = attention_block(
+            p["xattn"], hx, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, quant=quant, xkv=enc_out, use_rope=False,
+            mesh=mesh)
+        x = x + outx
+
+    h2 = apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.mlp == "moe":
+        if mesh is not None:
+            y = moe_ffn_sharded(p["ffn"], h2, mesh=mesh,
+                                n_experts=cfg.n_experts, top_k=cfg.top_k,
+                                capacity_factor=cfg.capacity_factor,
+                                quant=quant)
+        else:
+            y = moe_ffn(p["ffn"], h2, n_experts=cfg.n_experts,
+                        top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                        quant=quant)
+    elif cfg.mlp == "rwkv_cm":
+        y, cm_state = rwkv_channel_mix(
+            p["ffn"], h2, quant=quant, mesh=mesh,
+            state=state["cm"] if (state is not None and "cm" in state)
+            else None)
+        if state is not None:
+            new_state["cm"] = cm_state
+    else:
+        y = apply_mlp(p["ffn"], h2, kind=cfg.mlp, quant=quant)
+    x = x + y
+    # RWKV layers always carry channel-mix shift state in decode.
+    if kind == "rwkv" and state is not None and "cm" not in new_state:
+        new_state["cm"] = {"shift": h2[:, -1:]}
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Units (one repeat of block_pattern) — scan-over-units with stacked params
+# ---------------------------------------------------------------------------
+
+def init_unit(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    keys = jax.random.split(key, len(cfg.block_pattern))
+    return {str(i): init_layer(k, cfg, kind, cross=cross)
+            for i, (k, kind) in enumerate(zip(keys, cfg.block_pattern))}
+
+
+def unit_specs(cfg: ModelConfig, cross: bool = False) -> Params:
+    return {str(i): layer_specs(cfg, kind, cross=cross)
+            for i, kind in enumerate(cfg.block_pattern)}
+
+
+def init_unit_state(cfg: ModelConfig, batch: int, cache_len: int) -> Params:
+    return {str(i): init_layer_state(cfg, kind, batch, cache_len)
+            for i, kind in enumerate(cfg.block_pattern)}
+
+
+def apply_unit(p: Params, x, *, cfg: ModelConfig, mesh=None, state=None,
+               pos=0, enc_out=None, causal=True):
+    new_state = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        x, s = apply_layer(
+            p[str(i)], x, cfg=cfg, kind=kind, mesh=mesh,
+            state=state[str(i)] if state is not None else None,
+            pos=pos, enc_out=enc_out, causal=causal)
+        new_state[str(i)] = s
+    return x, new_state
+
+
+def _stack_init(key, n: int, init_fn):
+    """vmap an init function over ``n`` split keys -> stacked params."""
+    if n == 0:
+        return None
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def stack_specs(spec_tree: Params) -> Params:
+    """Prepend the 'layers' logical axis to every leaf (scan-stacked)."""
+    return tmap(lambda t: ("layers",) + tuple(t), spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# Full LM
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    cfg.validate()
+    ks = jax.random.split(key, 8)
+    p: Params = {"embed": init_embedding(ks[0], cfg.vocab, cfg.d_model,
+                                         cfg.jdtype)}
+    cross = cfg.encdec
+    if cfg.scan_layers:
+        p["units"] = _stack_init(ks[1], cfg.n_units,
+                                 lambda k: init_unit(k, cfg, cross=cross))
+    else:  # unstacked: calibration taps see the real param objects
+        uk = jax.random.split(ks[1], max(cfg.n_units, 1))
+        p["units"] = {f"u{i}": init_unit(uk[i], cfg, cross=cross)
+                      for i in range(cfg.n_units)}
+    if cfg.n_rem:
+        rk = jax.random.split(ks[2], cfg.n_rem)
+        p["rem"] = {str(i): init_layer(rk[i], cfg, cfg.block_pattern[i],
+                                       cross=cross)
+                    for i in range(cfg.n_rem)}
+    p["final_norm"] = init_norm(cfg.d_model, cfg.jdtype, cfg.norm)
+    if not cfg.tie_embeddings:
+        p["head"] = init_linear(ks[3], (cfg.d_model, cfg.vocab), cfg.jdtype)
+    if cfg.encdec:
+        enc_cfg = dataclasses.replace(cfg, encdec=False)
+        p["encoder"] = {
+            "units": _stack_init(
+                ks[4], cfg.n_enc_layers // len(cfg.block_pattern),
+                lambda k: init_unit(k, enc_cfg)),
+            "final_norm": init_norm(cfg.d_model, cfg.jdtype, cfg.norm),
+        }
+    if cfg.frontend == "vision":
+        # Stub projection from provided patch embeddings to d_model.
+        p["frontend_proj"] = init_linear(ks[5], (cfg.d_model, cfg.d_model),
+                                         cfg.jdtype)
+    return p
+
+
+def lm_specs(cfg: ModelConfig) -> Params:
+    s: Params = {"embed": embedding_specs()}
+    cross = cfg.encdec
+    if cfg.scan_layers:
+        s["units"] = stack_specs(unit_specs(cfg, cross=cross))
+    else:
+        s["units"] = {f"u{i}": unit_specs(cfg, cross=cross)
+                      for i in range(cfg.n_units)}
+    if cfg.n_rem:
+        s["rem"] = {str(i): layer_specs(cfg, cfg.block_pattern[i],
+                                        cross=cross)
+                    for i in range(cfg.n_rem)}
+    s["final_norm"] = norm_specs(cfg.norm)
+    if not cfg.tie_embeddings:
+        s["head"] = linear_specs(("embed", "vocab"))
+    if cfg.encdec:
+        s["encoder"] = {"units": stack_specs(unit_specs(cfg)),
+                        "final_norm": norm_specs(cfg.norm)}
+    if cfg.frontend == "vision":
+        s["frontend_proj"] = linear_specs(("embed", "embed_out"))
+    return s
+
+
+def _remat(fn, cfg: ModelConfig):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _scan_units(params_units, x, *, cfg: ModelConfig, mesh, pos, enc_out,
+                causal):
+    if params_units is None:
+        return x
+
+    if not cfg.scan_layers:  # unstacked dict (calibration / tiny models)
+        for i in range(len(params_units)):
+            x, _ = apply_unit(params_units[f"u{i}"], x, cfg=cfg, mesh=mesh,
+                              pos=pos, enc_out=enc_out, causal=causal)
+        return x
+
+    def body(carry, unit_p):
+        y, _ = apply_unit(unit_p, carry, cfg=cfg, mesh=mesh, pos=pos,
+                          enc_out=enc_out, causal=causal)
+        return y, ()
+
+    body = _remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params_units)
+    return x
+
+
+def embed_inputs(p: Params, cfg: ModelConfig, tokens: jax.Array | None,
+                 embeds: jax.Array | None = None) -> jax.Array:
+    """Token embedding + optional modality-stub embeddings.
+
+    vision: ``embeds`` [B, n_img, d] are projected and prepended.
+    audio (encdec): encoder consumes ``embeds`` directly; decoder uses
+    ``tokens`` only — handled by ``forward``.
+    """
+    parts = []
+    if embeds is not None and cfg.frontend == "vision":
+        fe = dense(p["frontend_proj"], embeds.astype(cfg.jdtype), None)
+        parts.append(fe)
+    if tokens is not None:
+        parts.append(jnp.take(p["embed"]["table"], tokens, axis=0))
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    return x
+
+
+def encode(p: Params, cfg: ModelConfig, enc_embeds: jax.Array,
+           mesh=None) -> jax.Array:
+    """Encoder stack over precomputed frame embeddings (audio stub)."""
+    x = enc_embeds.astype(cfg.jdtype)
+    enc_cfg = dataclasses.replace(cfg, encdec=False, scan_layers=True)
+    x = _scan_units(p["encoder"]["units"], x, cfg=enc_cfg, mesh=mesh, pos=0,
+                    enc_out=None, causal=False)
+    return apply_norm(p["encoder"]["final_norm"], x, cfg.norm)
+
+
+def logits_from_hidden(p: Params, cfg: ModelConfig, x: jax.Array,
+                       mesh=None):
+    from .common import act_spec, shard_hint
+    x = apply_norm(p["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["embed"]["table"])
+    else:
+        logits = dense(p["head"], x, None)
+    return shard_hint(logits, act_spec(mesh, x.shape[0], feat=cfg.vocab))
+
+
+def forward(
+    p: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array | None,
+    *,
+    embeds: jax.Array | None = None,
+    enc_embeds: jax.Array | None = None,
+    mesh=None,
+    pos: jax.Array | int = 0,
+) -> jax.Array:
+    """Training / one-shot prefill forward; returns logits [B, S_out, V].
+
+    ``embeds``     — vision patch embeddings (prepended to tokens).
+    ``enc_embeds`` — audio frame embeddings for the encoder (encdec only).
+    """
+    enc_out = None
+    if cfg.encdec:
+        assert enc_embeds is not None, "enc-dec model needs enc_embeds"
+        enc_out = encode(p, cfg, enc_embeds, mesh=mesh)
+    x = embed_inputs(p, cfg, tokens, embeds)
+    x = _scan_units(p["units"], x, cfg=cfg, mesh=mesh, pos=pos,
+                    enc_out=enc_out, causal=True)
+    for i in range(cfg.n_rem):
+        x, _ = apply_layer(p["rem"][str(i)], x, cfg=cfg,
+                           kind=cfg.block_pattern[i], mesh=mesh, pos=pos,
+                           enc_out=enc_out)
+    return logits_from_hidden(p, cfg, x, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int) -> Params:
+    """Stacked (per-unit) + remainder decode state for the whole model."""
+    state: Params = {}
+    if cfg.n_units:
+        unit_state = init_unit_state(cfg, batch, cache_len)
+        if cfg.scan_layers:
+            state["units"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_units,) + a.shape),
+                unit_state)
+        else:
+            state["units"] = {
+                f"u{i}": init_unit_state(cfg, batch, cache_len)
+                for i in range(cfg.n_units)}
+    for i in range(cfg.n_rem):
+        state[f"rem{i}"] = init_layer_state(cfg, cfg.block_pattern[i], batch,
+                                            cache_len)
+    return state
+
+
+def decode_state_specs(cfg: ModelConfig) -> Params:
+    """Logical axes for the decode state (cache sharding)."""
+    def kv_spec():
+        return {"k": ("batch", None, "kvheads_cache", None),
+                "v": ("batch", None, "kvheads_cache", None)}
+
+    def layer_state_spec(kind):
+        if kind in ("attn", "local"):
+            return kv_spec()
+        if kind == "rwkv":
+            return {"tm": {"shift": ("batch", None, None),
+                           "wkv": ("batch", "heads", None, None)},
+                    "cm": {"shift": ("batch", None, None)}}
+        if kind == "rglru":
+            return {"rec": {"h": ("batch", "rnn"),
+                            "conv": ("batch", None, "rnn")}}
+        raise ValueError(kind)
+
+    state: Params = {}
+    if cfg.n_units:
+        unit = {str(i): layer_state_spec(k)
+                for i, k in enumerate(cfg.block_pattern)}
+        state["units"] = stack_specs(unit)
+    for i in range(cfg.n_rem):
+        state[f"rem{i}"] = layer_state_spec(cfg.block_pattern[i])
+    return state
+
+
+def decode_step(
+    p: Params,
+    cfg: ModelConfig,
+    state: Params,
+    token: jax.Array,
+    pos: jax.Array,
+    *,
+    enc_out: jax.Array | None = None,
+    mesh=None,
+):
+    """One decode step.  token: [B, 1] int32; pos: scalar int32 (position of
+    this token).  Returns (logits [B, 1, V], new_state)."""
+    x = jnp.take(p["embed"]["table"], token, axis=0)
+
+    new_state = dict(state)
+    if cfg.n_units:
+        if cfg.scan_layers:
+            def body(carry, xs):
+                unit_p, unit_s = xs
+                y, s = apply_unit(unit_p, carry, cfg=cfg, mesh=mesh,
+                                  state=unit_s, pos=pos, enc_out=enc_out)
+                return y, s
+
+            x, new_units = jax.lax.scan(body, x, (p["units"], state["units"]))
+            new_state["units"] = new_units
+        else:
+            new_units = {}
+            for i in range(cfg.n_units):
+                x, s = apply_unit(p["units"][f"u{i}"], x, cfg=cfg, mesh=mesh,
+                                  state=state["units"][f"u{i}"], pos=pos,
+                                  enc_out=enc_out)
+                new_units[f"u{i}"] = s
+            new_state["units"] = new_units
+    for i in range(cfg.n_rem):
+        x, s = apply_layer(p["rem"][str(i)], x, cfg=cfg,
+                           kind=cfg.block_pattern[i], mesh=mesh,
+                           state=state[f"rem{i}"], pos=pos, enc_out=enc_out)
+        new_state[f"rem{i}"] = s
+    logits = logits_from_hidden(p, cfg, x, mesh)
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits: jax.Array, labels: jax.Array,
+            mask: jax.Array | None = None, z_loss: float = 0.0):
+    """Token-mean cross entropy in fp32 (+ optional z-loss), vocab-shard safe.
+
+    logits: [B, S, V]; labels: [B, S] int32; mask: [B, S] (1 = contributes).
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

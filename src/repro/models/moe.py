@@ -1,0 +1,186 @@
+"""Mixture-of-Experts FFN with expert parallelism (EP).
+
+Top-k token-choice routing with capacity-based dropping, the production
+sharding pattern:
+
+  * expert weights are sharded over the ``model`` mesh axis (EP);
+  * tokens are sharded over the data axes and *replicated* along ``model``;
+  * each device routes its local tokens to its local experts only (sort-
+    based capacity dispatch — no [T, E, C] one-hot is ever materialized),
+    computes, and the per-device partial outputs are combined with a
+    ``psum`` over ``model``.
+
+This trades the classical all-to-all for one reduce over ``model`` —
+identical asymptotic bytes to a tensor-parallel FFN reduce, with perfectly
+balanced expert storage.  On the 512-chip mesh, qwen3's 128 experts live 8
+per model shard.
+
+``moe_ffn`` is pure and mesh-free; ``moe_ffn_sharded`` wraps it in
+shard_map.  The same code path (E_loc = E, no psum) runs single-device
+smoke tests.  Expert GEMMs go through ``dense`` => APSQ applies to them
+(per-expert K tiling), as DESIGN.md §Arch-applicability notes.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import QuantConfig, quant_dense
+from .common import Params, dense, init_linear, linear_specs
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, top_k: int,
+             dtype, quant: QuantConfig | None = None) -> Params:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    sf = 1.0 / math.sqrt(d_ff)
+    p = {
+        "router": init_linear(kr, (d_model, n_experts), jnp.float32),
+        "wi": (jax.random.normal(k1, (n_experts, d_model, d_ff), jnp.float32)
+               * s).astype(dtype),
+        "wg": (jax.random.normal(k2, (n_experts, d_model, d_ff), jnp.float32)
+               * s).astype(dtype),
+        "wo": (jax.random.normal(k3, (n_experts, d_ff, d_model), jnp.float32)
+               * sf).astype(dtype),
+    }
+    if quant is not None and quant.enabled:
+        # One quantizer state per expert weight tensor (shared across E for
+        # scale simplicity; per-expert aw columns broadcast fine).
+        from repro.core import quant_params_init
+        p["qp_wi"] = quant_params_init(p["wi"][0].astype(jnp.float32), quant)
+        p["qp_wg"] = quant_params_init(p["wg"][0].astype(jnp.float32), quant)
+        p["qp_wo"] = quant_params_init(p["wo"][0].astype(jnp.float32), quant)
+    return p
+
+
+def moe_specs(quant=None) -> Params:
+    s = {
+        "router": linear_specs(("embed", None)),
+        "wi": ("expert", "embed", "ff_unsharded"),
+        "wg": ("expert", "embed", "ff_unsharded"),
+        "wo": ("expert", "ff_unsharded", "embed"),
+    }
+    if quant is not None and quant.enabled:
+        qspec = {"aw": (None,), "ax": (), "ap": (None,)}
+        s["qp_wi"] = dict(qspec)
+        s["qp_wg"] = dict(qspec)
+        s["qp_wo"] = dict(qspec)
+    return s
+
+
+def _expert_gemm(x, w, qp, quant):
+    """x: [E, C, K] @ w: [E, K, N] -> [E, C, N], optionally quantized."""
+    if quant is None or not quant.enabled or qp is None:
+        return jnp.einsum("eck,ekn->ecn", x, w.astype(x.dtype))
+    f = lambda xe, we: quant_dense(xe, we.astype(jnp.float32), qp, quant)
+    return jax.vmap(f)(x.astype(jnp.float32), w.astype(jnp.float32)
+                       ).astype(x.dtype)
+
+
+def moe_ffn(p: Params, x: jax.Array, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25,
+            quant: QuantConfig | None = None,
+            expert_offset: int = 0, n_local_experts: int | None = None,
+            axis_name: str | None = None) -> jax.Array:
+    """Top-k MoE FFN over local experts [expert_offset, +n_local).
+
+    x: [B, S, d].  When ``axis_name`` is given the result is psum'd over
+    that axis (EP combine).  Router always sees all n_experts logits.
+    """
+    B, S, d = x.shape
+    E = n_experts
+    E_loc = n_local_experts or E
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = dense(p["router"], xt.astype(jnp.float32), None)  # [T, E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, top_k)                   # [T, k]
+    topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+
+    # --- capacity dispatch over local experts (sort-based, no one-hot) ---
+    cap = int(math.ceil(T * top_k / E * capacity_factor))
+    e_flat = topi.reshape(T * top_k) - expert_offset           # local ids
+    t_flat = jnp.repeat(jnp.arange(T), top_k)
+    w_flat = topw.reshape(T * top_k)
+    local = (e_flat >= 0) & (e_flat < E_loc)
+    e_key = jnp.where(local, e_flat, E_loc)  # non-local sorts to the end
+
+    order = jnp.argsort(e_key, stable=True)
+    e_sort, t_sort, w_sort = e_key[order], t_flat[order], w_flat[order]
+    # rank of each entry within its expert = position - first position
+    counts = jnp.bincount(e_sort, length=E_loc + 1)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)])[:-1]
+    rank = jnp.arange(T * top_k) - starts[e_sort]
+    keep = (e_sort < E_loc) & (rank < cap)
+    slot = jnp.where(keep, e_sort * cap + rank, E_loc * cap)   # overflow slot
+
+    buf = jnp.zeros((E_loc * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(jnp.where(keep[:, None], xt[t_sort], 0))
+    h = buf[:-1].reshape(E_loc, cap, d)
+
+    # --- expert computation (swiglu) ---
+    a = _expert_gemm(h, p["wg"], p.get("qp_wg"), quant)
+    b = _expert_gemm(h, p["wi"], p.get("qp_wi"), quant)
+    hidden = jax.nn.silu(a) * b
+    y_exp = _expert_gemm(hidden, p["wo"], p.get("qp_wo"), quant)
+
+    # --- combine back to tokens ---
+    y_flat = jnp.concatenate(
+        [y_exp.reshape(E_loc * cap, d), jnp.zeros((1, d), y_exp.dtype)])
+    y_tok = y_flat[slot] * jnp.where(keep, w_sort, 0.0)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[t_sort].add(y_tok)
+
+    if axis_name is not None:
+        y = jax.lax.psum(y, axis_name)
+    return y.reshape(B, S, d)
+
+
+def moe_ffn_sharded(p: Params, x: jax.Array, *, mesh, n_experts: int,
+                    top_k: int, capacity_factor: float = 1.25,
+                    quant: QuantConfig | None = None,
+                    data_axes=("pod", "data"), model_axis="model"):
+    """EP via shard_map: tokens sharded over data axes, experts over model.
+
+    Falls back to the pure version when mesh is None (smoke tests).
+    """
+    if mesh is None:
+        return moe_ffn(p, x, n_experts=n_experts, top_k=top_k,
+                       capacity_factor=capacity_factor, quant=quant)
+
+    data_axes = tuple(a for a in data_axes if a in mesh.axis_names)
+    m = mesh.shape[model_axis]
+    assert n_experts % m == 0, (n_experts, m)
+    e_loc = n_experts // m
+
+    expert_spec = P(model_axis)
+    in_specs = (
+        jax.tree.map(lambda _: P(), p["router"]),
+        {k: (P(model_axis) if k in ("wi", "wg", "wo")
+             else jax.tree.map(lambda _: P(), v))
+         for k, v in p.items() if k != "router"},
+        P(data_axes, None, None),
+    )
+
+    def local_fn(router, experts, xl):
+        idx = jax.lax.axis_index(model_axis)
+        pl = dict(experts)
+        pl["router"] = router
+        return moe_ffn(pl, xl, n_experts=n_experts, top_k=top_k,
+                       capacity_factor=capacity_factor, quant=quant,
+                       expert_offset=idx * e_loc, n_local_experts=e_loc,
+                       axis_name=model_axis)
+
+    f = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=in_specs,
+        out_specs=P(data_axes, None, None),
+        check_vma=False,
+    )
+    experts = {k: v for k, v in p.items() if k != "router"}
+    return f(p["router"], experts, x)

@@ -1,0 +1,147 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> {linear_x -> causal depthwise conv1d(w=4) -> RG-LRU} * gelu(linear_y)
+          -> linear_out
+
+RG-LRU (per channel):
+    r_t = sigmoid(W_a x_t + b_a)           (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)           (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t) (data-dependent decay, c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` (log-depth parallel
+linear recurrence — the production path for long_500k); decode carries
+``h`` one step at a time.  The recurrence is diagonal (not a GEMM), so APSQ
+does not apply to the state itself — only to the block's projections.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+from .common import Params, dense, init_linear, linear_specs
+
+RGLRU_C = 8.0
+CONV_WIDTH = 4
+
+
+def init_rglru_block(key, d_model: int, d_rnn: int, dtype,
+                     quant: QuantConfig | None = None) -> Params:
+    ks = jax.random.split(key, 6)
+    # Lambda init so decay a in [0.9, 0.999] at r = 1 (Griffin appendix).
+    u = jax.random.uniform(ks[0], (d_rnn,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / RGLRU_C))  # inv-softplus
+    return {
+        "wx": init_linear(ks[1], (d_model, d_rnn), dtype, quant=quant),
+        "wy": init_linear(ks[2], (d_model, d_rnn), dtype, quant=quant),
+        "conv_w": (jax.random.normal(ks[3], (CONV_WIDTH, d_rnn), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_rnn,), dtype),
+        "gate_a": init_linear(ks[4], (d_rnn, d_rnn), dtype),
+        "gate_x": init_linear(ks[5], (d_rnn, d_rnn), dtype),
+        "gate_a_b": jnp.zeros((d_rnn,), jnp.float32),
+        "gate_x_b": jnp.zeros((d_rnn,), jnp.float32),
+        "lam": lam,
+        "wo": init_linear(jax.random.fold_in(key, 7), (d_rnn, d_model), dtype,
+                          quant=quant),
+    }
+
+
+def rglru_block_specs(quant=None) -> Params:
+    return {
+        "wx": linear_specs(("embed", "rnn"), quant),
+        "wy": linear_specs(("embed", "rnn"), quant),
+        "conv_w": (None, "rnn"),
+        "conv_b": ("rnn",),
+        "gate_a": linear_specs(("rnn", "rnn_out")),
+        "gate_x": linear_specs(("rnn", "rnn_out")),
+        "gate_a_b": ("rnn",),
+        "gate_x_b": ("rnn",),
+        "lam": ("rnn",),
+        "wo": linear_specs(("rnn", "embed"), quant),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                   state: jax.Array | None):
+    """Depthwise causal conv, width CONV_WIDTH.  x: [B, S, d].
+    state: [B, CONV_WIDTH-1, d] trailing inputs from the previous call."""
+    if state is None:
+        state = jnp.zeros((x.shape[0], CONV_WIDTH - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i:i + x.shape[1]] * w[i][None, None].astype(x.dtype)
+        for i in range(CONV_WIDTH)
+    ) + b[None, None].astype(x.dtype)
+    new_state = xp[:, -(CONV_WIDTH - 1):]
+    return out, new_state
+
+
+def _rglru_scan(x: jax.Array, a: jax.Array, h0: jax.Array):
+    """h_t = a_t h_{t-1} + x_t via associative scan.  All [B, S, d] fp32."""
+    # Fold h0 into the first element: h_1 = a_1 h0 + x_1.
+    x = x.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_out, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h
+
+
+def rglru_block(p: Params, x: jax.Array, *,
+                quant: QuantConfig | None = None,
+                state: Params | None = None, mesh=None):
+    """Full recurrent block.  state = {"h": [B, d_rnn] fp32,
+    "conv": [B, 3, d_rnn]} or None (fresh)."""
+    from .common import act_spec, act_spec_seq, shard_hint
+    B, S, _ = x.shape
+    d_rnn = p["wx"]["w"].shape[-1]
+    if S > 1 and mesh is not None and "model" in mesh.axis_names \
+            and S % mesh.shape["model"] == 0:
+        # Sequence-parallel variant (§Perf it3): gates/gelu/recurrence all
+        # run on S/TP tokens with full channels — no TP all-reduce per
+        # gate GEMM; the (diagonal) RG-LRU scan still crosses shard
+        # boundaries via GSPMD halos.
+        rnn_spec = act_spec_seq(mesh, B, S)
+    else:
+        rnn_spec = act_spec(mesh, B, feat=d_rnn)
+    y = jax.nn.gelu(dense(p["wy"], x, quant))
+    y = shard_hint(y, rnn_spec)
+    xr = dense(p["wx"], x, quant)
+    conv_state = state["conv"] if state is not None else None
+    xr, new_conv = _causal_conv1d(xr, p["conv_w"], p["conv_b"], conv_state)
+    # Keep the whole recurrence sharded on the (diagonal) channel dim —
+    # without these hints the rnn x rnn gate GEMMs regather [B,S,d_rnn]
+    # per layer (the collective-bound prefill_32k cell in §Perf).
+    xr = shard_hint(xr, rnn_spec)
+
+    xf = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(
+        shard_hint(dense(p["gate_a"], xr, None), rnn_spec)
+        .astype(jnp.float32) + p["gate_a_b"])
+    i = jax.nn.sigmoid(
+        shard_hint(dense(p["gate_x"], xr, None), rnn_spec)
+        .astype(jnp.float32) + p["gate_x_b"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"])[None, None] * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((B, xr.shape[-1]), jnp.float32))
+    if S == 1:  # decode fast path
+        h = (a[:, 0] * h0 + gated[:, 0])[:, None]
+    else:
+        h = _rglru_scan(gated, a, h0)
+
+    out = dense(p["wo"], (h.astype(x.dtype) * y), quant)
+    new_state = {"h": h[:, -1], "conv": new_conv}
+    return out, new_state
+
+
+def init_rglru_state(batch: int, d_rnn: int, dtype=jnp.bfloat16):
+    return {"h": jnp.zeros((batch, d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_WIDTH - 1, d_rnn), dtype)}

@@ -1,0 +1,297 @@
+"""RWKV6 "Finch" — attention-free time mixing with data-dependent decay.
+
+Faithful structure (arXiv:2404.05892): token-shift with data-dependent
+lerp (ddlerp via a small LoRA), per-channel data-dependent decay
+``w_t = exp(-exp(...))``, bonus ``u``, per-head WKV state recurrence
+
+    y_t = r_t . (S_{t-1} + (u * k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+and a squared-ReLU channel mix.  Two WKV implementations:
+
+  * ``scan``    — one lax.scan step per token (reference; O(1) memory).
+  * ``chunked`` — chunk-parallel form: the sequence is split into chunks of
+    C tokens; intra-chunk interactions use a [C, C] decay-weighted score
+    matmul (MXU-friendly), inter-chunk state is carried by a scan over
+    chunks.  All exponents are differences of cumulative log-decays within
+    one chunk, hence <= 0 — numerically safe (underflow -> 0).  This is the
+    §Perf hillclimb path: T/C scan steps instead of T.
+
+All projections go through ``dense`` (=> quantizable / APSQ-able); the WKV
+state itself is fp32 internal and is NOT a GEMM PSUM, so APSQ does not
+apply to it (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+from .common import Params, dense, init_linear, linear_specs
+
+LORA_R = 64        # ddlerp LoRA rank
+DECAY_LORA_R = 64  # decay LoRA rank
+
+
+def init_rwkv_time_mix(key, d_model: int, n_heads: int, head_dim: int, dtype,
+                       quant: QuantConfig | None = None) -> Params:
+    ks = jax.random.split(key, 12)
+    d_attn = n_heads * head_dim
+    return {
+        # ddlerp: 5 static mixes (r, w, k, v, g) + shared LoRA
+        "mu": jnp.zeros((5, d_model), dtype) + 0.5,
+        "mix_w1": init_linear(ks[0], (d_model, 5 * LORA_R), dtype),
+        "mix_w2": (jax.random.normal(ks[1], (5, LORA_R, d_model), jnp.float32)
+                   * 0.01).astype(dtype),
+        # projections
+        "wr": init_linear(ks[2], (d_model, d_attn), dtype, quant=quant),
+        "wk": init_linear(ks[3], (d_model, d_attn), dtype, quant=quant),
+        "wv": init_linear(ks[4], (d_model, d_attn), dtype, quant=quant),
+        "wg": init_linear(ks[5], (d_model, d_attn), dtype, quant=quant),
+        "wo": init_linear(ks[6], (d_attn, d_model), dtype, quant=quant),
+        # data-dependent decay
+        "w0": jnp.zeros((d_attn,), dtype) - 6.0,  # ~slow decay at init
+        "decay_w1": init_linear(ks[7], (d_model, DECAY_LORA_R), dtype),
+        "decay_w2": (jax.random.normal(ks[8], (DECAY_LORA_R, d_attn),
+                                       jnp.float32) * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[9], (n_heads, head_dim), jnp.float32)
+              * 0.1).astype(dtype),
+        # per-head group norm on the WKV output
+        "ln_out": {"scale": jnp.ones((d_attn,), dtype),
+                   "bias": jnp.zeros((d_attn,), dtype)},
+    }
+
+
+def rwkv_time_mix_specs(quant=None) -> Params:
+    return {
+        "mu": (None, "embed"),
+        "mix_w1": linear_specs(("embed", None)),
+        "mix_w2": (None, None, "embed"),
+        "wr": linear_specs(("embed", "qheads"), quant),
+        "wk": linear_specs(("embed", "qheads"), quant),
+        "wv": linear_specs(("embed", "qheads"), quant),
+        "wg": linear_specs(("embed", "qheads"), quant),
+        "wo": linear_specs(("qheads", "embed"), quant),
+        "w0": ("qheads",),
+        "decay_w1": linear_specs(("embed", None)),
+        "decay_w2": (None, "qheads"),
+        "u": ("heads", None),
+        "ln_out": {"scale": ("qheads",), "bias": ("qheads",)},
+    }
+
+
+def init_rwkv_channel_mix(key, d_model: int, d_ff: int, dtype,
+                          quant: QuantConfig | None = None) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": jnp.zeros((2, d_model), dtype) + 0.5,  # (r, k) mixes
+        "wr": init_linear(k1, (d_model, d_model), dtype, quant=quant),
+        "wk": init_linear(k2, (d_model, d_ff), dtype, quant=quant),
+        "wv": init_linear(k3, (d_ff, d_model), dtype, quant=quant),
+    }
+
+
+def rwkv_channel_mix_specs(quant=None) -> Params:
+    return {
+        "mu": (None, "embed"),
+        "wr": linear_specs(("embed", "embed_out")),
+        "wk": linear_specs(("embed", "ff"), quant),
+        "wv": linear_specs(("ff", "embed"), quant),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None):
+    """xx_t = x_{t-1} (zeros / carried state at t=0).  x: [B, S, d]."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: Params, x, xx):
+    """Data-dependent lerp producing the 5 mixed inputs (r, w, k, v, g)."""
+    sx = (xx - x).astype(x.dtype)
+    base = x + sx * p["mu"][:, None, None, :]  # [5, B, S, d] via broadcast
+    b = jnp.tanh(dense(p["mix_w1"], x, None))  # [B, S, 5R]
+    b = b.reshape(b.shape[:-1] + (5, LORA_R))
+    adj = jnp.einsum("bsfr,frd->fbsd", b, p["mix_w2"].astype(x.dtype))
+    return base + sx[None] * adj  # [5, B, S, d]
+
+
+def _decay(p: Params, xw: jax.Array) -> jax.Array:
+    """log(w_t) = -exp(w0 + lora(xw)) in fp32; w = exp(log_w) in (0, 1)."""
+    lo = dense(p["decay_w1"], xw, None)
+    lo = jnp.tanh(lo) @ p["decay_w2"].astype(xw.dtype)
+    return -jnp.exp((p["w0"].astype(jnp.float32) + lo.astype(jnp.float32)))
+
+
+def _wkv_scan(r, k, v, log_w, u, state):
+    """Reference WKV: scan over time.  r/k/v: [B, S, H, hd] fp32;
+    log_w: [B, S, H, hd]; u: [H, hd]; state: [B, H, hd, hd]."""
+    def step(s, xs):
+        rt, kt, vt, lwt = xs  # [B, H, hd]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = jnp.exp(lwt)[..., None] * s + kv
+        return s, yt
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, log_w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state  # [B, S, H, hd], final state
+
+
+def _wkv_chunked(r, k, v, log_w, u, state, chunk: int = 32,
+                 compute_dtype=jnp.float32):
+    """Chunk-parallel WKV (GLA-style).  Exponents are in-chunk cumulative
+    log-decay differences (<= 0), so everything stays in fp32 safely.
+
+    ``compute_dtype``: dtype of the intra-chunk matmul *operands* (state,
+    cumulative decays and accumulation stay fp32).  bf16 halves the
+    per-chunk tensor traffic (§Perf iteration 5) at ~1e-2 relative error.
+    """
+    B, S, H, hd = r.shape
+    C = min(chunk, S)
+    n = -(-S // C)
+    pad = n * C - S
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, log_w = z(r), z(k), z(v), z(log_w)
+
+    rc = r.reshape(B, n, C, H, hd)
+    kc = k.reshape(B, n, C, H, hd)
+    vc = v.reshape(B, n, C, H, hd)
+    lw = log_w.reshape(B, n, C, H, hd)
+    cd = compute_dtype
+    f32 = jnp.float32
+
+    def chunk_step(s, xs):
+        rt, kt, vt, lwt = xs  # [B, C, H, hd]
+        # L_t = sum_{i<=t} log w_i  (cumulative within chunk, <= 0)
+        L = jnp.cumsum(lwt, axis=1)
+        L_prev = L - lwt  # L_{t-1} with L_{-1} = 0
+        L_end = L[:, -1:]
+        # Inter-chunk: q side sees decay from chunk start to t-1.
+        r_in = (rt * jnp.exp(L_prev)).astype(cd)
+        y_inter = jnp.einsum("bchk,bhkv->bchv", r_in, s.astype(cd),
+                             preferred_element_type=f32)
+        # Intra-chunk (strictly causal): decay(s+1 .. t-1) = L_{t-1} - L_s,
+        # factored as exp(L_prev_t) * exp(-L_s).  |L| <= chunk * |log_w|_max
+        # stays < 80 given the clamp in rwkv_time_mix, so fp32 is safe.
+        k_out = (kt * jnp.exp(-L)).astype(cd)  # k_s * exp(-L_s)
+        scores = jnp.einsum("bchk,bdhk->bhcd", r_in, k_out,
+                            preferred_element_type=f32)
+        idx = jnp.arange(C)
+        causal = idx[:, None] > idx[None, :]
+        scores = jnp.where(causal[None, None], scores, 0.0)
+        y_intra = jnp.einsum("bhcd,bdhv->bchv", scores.astype(cd),
+                             vt.astype(cd), preferred_element_type=f32)
+        # Bonus (current token): (r_t . (u * k_t)) v_t
+        bonus = jnp.einsum("bchk,bchk->bch", rt, u[None, None] * kt)
+        y_bonus = bonus[..., None] * vt
+        # State to next chunk: S' = D(L_end) S + sum_s D(L_end - L_s) k_s v_s
+        k_fold = (kt * jnp.exp(L_end - L)).astype(cd)
+        s_new = (jnp.exp(L_end[:, 0])[..., None] * s
+                 + jnp.einsum("bchk,bchv->bhkv", k_fold, vt.astype(cd),
+                              preferred_element_type=f32))
+        return s_new, y_inter + y_intra + y_bonus
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, lw))
+    # Remat per chunk: without this the backward saves every intra-chunk
+    # intermediate (~15 tensors/trip); with it only the state carry is
+    # saved and the chunk body recomputes — ~10x less residual traffic
+    # for ~1x extra (cheap) chunk flops (§Perf iteration 4).
+    state, ys = jax.lax.scan(jax.checkpoint(chunk_step), state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, n * C, H, hd)[:, :S]
+    return y, state
+
+
+def rwkv_time_mix(p: Params, x: jax.Array, *, n_heads: int, head_dim: int,
+                  quant: QuantConfig | None = None, impl: str = "scan",
+                  state: Params | None = None, wkv_chunk: int = 32,
+                  mesh=None):
+    """RWKV6 time mixing.  state (decode / carry) = {"shift": [B, 1, d],
+    "wkv": [B, H, hd, hd]}; pass None for fresh (training) state."""
+    from .common import act_spec, act_spec_seq, shard_hint
+    B, S, d = x.shape
+    H, hd = n_heads, head_dim
+    prev = state["shift"] if state is not None else None
+    # Sequence parallelism for the ddlerp region: the [5, B, S, d] mixed
+    # streams and their gradients are elementwise — sharding S over
+    # "model" cuts their (otherwise TP-replicated) traffic 16x (§Perf).
+    sspec = act_spec_seq(mesh, B, S)
+    xx = _token_shift(x, prev)
+    xx = shard_hint(xx, sspec)
+    mixed = _ddlerp(p, x, xx)  # [5, B, S, d]
+    if sspec is not None:
+        mixed = shard_hint(mixed, jax.sharding.NamedSharding(
+            sspec.mesh, jax.sharding.PartitionSpec(None, *sspec.spec)))
+    xr, xw, xk, xv, xg = mixed
+
+    hspec = act_spec(mesh, B, heads=H)
+    r = shard_hint(dense(p["wr"], xr, quant).reshape(B, S, H, hd),
+                   hspec).astype(jnp.float32)
+    k = shard_hint(dense(p["wk"], xk, quant).reshape(B, S, H, hd),
+                   hspec).astype(jnp.float32)
+    v = shard_hint(dense(p["wv"], xv, quant).reshape(B, S, H, hd),
+                   hspec).astype(jnp.float32)
+    g = dense(p["wg"], xg, quant)
+    log_w = _decay(p, xw).reshape(B, S, H, hd)
+    # Clamp so |cumsum(log_w)| <= wkv_chunk * 2 < 80: the chunked form's
+    # exp(+/-L) factors then never leave fp32 range.  (Decay floor of
+    # e^-2 per step; faster-than-that decay is indistinguishable after a
+    # handful of tokens.)
+    log_w = jnp.clip(log_w, -2.0, -1e-4)
+
+    s0 = (state["wkv"] if state is not None
+          else jnp.zeros((B, H, hd, hd), jnp.float32))
+    u = p["u"].astype(jnp.float32)
+    if impl == "chunked" and S > 1:
+        # compute_dtype=bf16 was measured in §Perf iteration 5 and
+        # REFUTED on the bytes-accessed metric (convert boundary traffic
+        # outweighs the halved operand bytes on this fusion layout);
+        # keeping fp32 operands.
+        y, s_new = _wkv_chunked(r, k, v, log_w, u, s0, chunk=wkv_chunk)
+    else:
+        y, s_new = _wkv_scan(r, k, v, log_w, u, s0)
+
+    # per-head group norm (sequence-parallel: elementwise region)
+    yf = y.reshape(B, S, H, hd)
+    yf = shard_hint(yf, act_spec_seq(mesh, B, S, n_trailing=2))
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + 1e-5)
+    yf = yf.reshape(B, S, H * hd)
+    yf = yf * p["ln_out"]["scale"].astype(jnp.float32) \
+        + p["ln_out"]["bias"].astype(jnp.float32)
+
+    out = dense(p["wo"], shard_hint(yf.astype(x.dtype) * jax.nn.silu(g),
+                                    sspec), quant)
+    new_state = {"shift": x[:, -1:], "wkv": s_new}
+    return out, new_state
+
+
+def rwkv_channel_mix(p: Params, x: jax.Array, *,
+                     quant: QuantConfig | None = None,
+                     state: Params | None = None, mesh=None):
+    """Squared-ReLU channel mix.  state = {"shift": [B, 1, d]}."""
+    from .common import act_spec_seq, shard_hint
+    B, S = x.shape[:2]
+    sspec = act_spec_seq(mesh, B, S)
+    prev = state["shift"] if state is not None else None
+    xx = shard_hint(_token_shift(x, prev), sspec)
+    sx = xx - x
+    xk = shard_hint(x + sx * p["mu"][1][None, None], sspec)
+    xr = shard_hint(x + sx * p["mu"][0][None, None], sspec)
+    kk = jnp.square(jax.nn.relu(dense(p["wk"], xk, quant)))
+    out = jax.nn.sigmoid(dense(p["wr"], xr, None)) * dense(p["wv"], kk, quant)
+    return out, {"shift": x[:, -1:]}
+
+
+def init_rwkv_state(batch: int, d_model: int, n_heads: int, head_dim: int,
+                    dtype=jnp.bfloat16):
+    """Fresh decode state for one RWKV layer (time-mix + channel-mix)."""
+    return {
+        "tm": {"shift": jnp.zeros((batch, 1, d_model), dtype),
+               "wkv": jnp.zeros((batch, n_heads, head_dim, head_dim),
+                                jnp.float32)},
+        "cm": {"shift": jnp.zeros((batch, 1, d_model), dtype)},
+    }

@@ -1,0 +1,12 @@
+"""Optimizers: AdamW (+factored option), schedules, clipping, decay masks."""
+from .adamw import (
+    OptimConfig,
+    apply_updates,
+    decay_mask,
+    global_norm,
+    init_opt_state,
+    lr_schedule,
+)
+
+__all__ = ["OptimConfig", "apply_updates", "decay_mask", "global_norm",
+           "init_opt_state", "lr_schedule"]

@@ -1,0 +1,141 @@
+"""AdamW with gradient clipping, schedules, and a weight-decay mask.
+
+Plain-pytree implementation (no optax dependency): state = {m, v, step}.
+Quantizer scales (LSQ alphas / PO2 log-alphas) and norm params are excluded
+from weight decay via a path-based mask, matching LSQ practice.
+
+``adafactor_like=True`` switches the second moment to factored row/col
+statistics for 2D+ params (memory: O(m+n) instead of O(mn)) — the
+large-model option used by the qwen3-235b config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+NO_DECAY_KEYS = ("scale", "bias", "ln", "norm", "ax", "aw", "ap", "mu",
+                 "u", "w0", "lam", "gate_a_b", "gate_x_b")
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    adafactor_like: bool = False
+
+
+def lr_schedule(cfg: OptimConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to ``min_lr_frac * lr``."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def decay_mask(params) -> dict:
+    """True where weight decay applies (2D+ weights, not scales/norms)."""
+    def mask_leaf(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if any(str(n) in NO_DECAY_KEYS for n in names):
+            return False
+        return getattr(leaf, "ndim", 0) >= 2
+
+    return jax.tree_util.tree_map_with_path(mask_leaf, params)
+
+
+def _factored(shape: tuple) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def init_opt_state(params, cfg: OptimConfig) -> dict:
+    def zeros_like_f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
+    m = jax.tree.map(zeros_like_f32, params)
+    if cfg.adafactor_like:
+        def v_init(p):
+            if _factored(p.shape):
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                         jnp.float32)}
+            return {"full": jnp.zeros(p.shape, jnp.float32)}
+        v = jax.tree.map(v_init, params)
+    else:
+        v = jax.tree.map(zeros_like_f32, params)
+    return {"m": m, "v": v, "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _second_moment_value(v, _unused=None):
+    if "full" in v:
+        return v["full"]
+    row, col = v["row"], v["col"]
+    denom = jnp.maximum(jnp.mean(row, axis=-1, keepdims=True), 1e-30)
+    return row[..., None] * col[..., None, :] / denom[..., None]
+
+
+def apply_updates(params, grads, state, cfg: OptimConfig,
+                  mask=None) -> tuple:
+    """One AdamW step.  Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    if mask is None:
+        mask = decay_mask(params)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                         state["m"], grads)
+    if cfg.adafactor_like:
+        is_v = lambda x: isinstance(x, dict) and ("full" in x or "row" in x)
+
+        def v_upd(v, g):
+            g2 = jnp.square(g)
+            if "full" in v:
+                return {"full": b2 * v["full"] + (1 - b2) * g2}
+            return {"row": b2 * v["row"] + (1 - b2) * jnp.mean(g2, axis=-1),
+                    "col": b2 * v["col"] + (1 - b2) * jnp.mean(g2, axis=-2)}
+
+        new_v = jax.tree.map(v_upd, state["v"], grads, is_leaf=is_v)
+        v_hat = jax.tree.map(lambda v: _second_moment_value(v, None) / bc2,
+                             new_v, is_leaf=is_v)
+    else:
+        new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                             state["v"], grads)
+        v_hat = jax.tree.map(lambda v: v / bc2, new_v)
+
+    def upd(p, m, vh, use_wd):
+        u = (m / bc1) / (jnp.sqrt(vh) + cfg.eps)
+        if use_wd:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, v_hat, mask)
+    stats = {"lr": lr, "grad_norm": gnorm, "step": step}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, stats

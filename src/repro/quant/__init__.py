@@ -1,0 +1,11 @@
+"""QAT integration: calibration, distillation, gs-sweep harness."""
+from .qat import (
+    SweepResult,
+    calibrate_model,
+    distill_loss,
+    make_distill_loss_fn,
+    quant_variants,
+)
+
+__all__ = ["SweepResult", "calibrate_model", "distill_loss",
+           "make_distill_loss_fn", "quant_variants"]

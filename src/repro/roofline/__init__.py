@@ -1,0 +1,15 @@
+"""Roofline: 3-term model from compiled dry-run artifacts (v5e target)."""
+from .analysis import (
+    COLLECTIVE_OPS,
+    HwSpec,
+    V5E,
+    collective_bytes,
+    cost_terms,
+    model_flops,
+    useful_fraction,
+)
+from .hlo_cost import analyze_hlo
+
+__all__ = ["COLLECTIVE_OPS", "HwSpec", "V5E", "analyze_hlo",
+           "collective_bytes", "cost_terms", "model_flops",
+           "useful_fraction"]

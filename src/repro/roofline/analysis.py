@@ -1,0 +1,144 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e target).
+
+  compute term    = HLO_FLOPs   / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes   / (chips * HBM_bw)
+  collective term = coll_bytes  / (chips * link_bw)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs / bytes accessed;
+collective bytes are NOT in cost_analysis, so ``collective_bytes`` parses
+the optimized HLO text and sums operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants (v5e): 197 TFLOP/s bf16 per chip; 819 GB/s HBM;
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+
+@dataclasses.dataclass(frozen=True)
+class HwSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9           # bytes/s per chip
+    link_bw: float = 50e9           # bytes/s per ICI link
+    dcn_bw: float = 25e9            # bytes/s per host crossing pods
+
+
+V5E = HwSpec()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+# one shape token: dtype[d0,d1,...] with optional layout {...}
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+[a-z0-9]*|pred)\[([0-9,]*)\]")
+_TUPLE_SPLIT_RE = re.compile(r"\)\s*,")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind from optimized HLO text.
+
+    For every instruction line ``%x = <shape> <op>(<operands>)``, operand
+    shapes appear inline; we sum them (falls back to the result shape when
+    no inline operand shapes are printed).
+    """
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.search(r"=\s*(.+?)\s+(" + "|".join(COLLECTIVE_OPS)
+                      + r")(\.[0-9]+)?\(", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        # operands: text inside the outermost call parens
+        call = s[m.end() - 1:]
+        depth = 0
+        end = 0
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = call[1:end]
+        op_shapes = _SHAPE_RE.findall(operands)
+        if op_shapes:
+            b = sum(_shape_bytes(dt, dims) for dt, dims in op_shapes)
+        else:
+            res_shapes = _SHAPE_RE.findall(m.group(1))
+            b = sum(_shape_bytes(dt, dims) for dt, dims in res_shapes)
+        out[kind] += b
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    out["counts"] = counts
+    return out
+
+
+def cost_terms(cost: dict, coll: dict, n_chips: int,
+               hw: HwSpec = V5E, dcn_bytes: int = 0) -> dict:
+    """The three roofline terms, in seconds.
+
+    ``cost`` is ``compiled.cost_analysis()`` (flops / bytes accessed are
+    whole-program totals across the SPMD program = per-chip numbers after
+    partitioning; XLA reports the per-replica program).
+    """
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll_b = float(coll.get("total", 0))
+    t_compute = flops / hw.peak_flops
+    t_memory = bytes_accessed / hw.hbm_bw
+    t_coll = coll_b / hw.link_bw
+    t_dcn = dcn_bytes / hw.dcn_bw if dcn_bytes else 0.0
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll, "dcn_s": t_dcn}
+    dominant = max(terms, key=lambda k: terms[k])
+    bound = max(t_compute, t_memory, t_coll, t_dcn)
+    total = t_compute + t_memory + t_coll + t_dcn
+    return {
+        **terms,
+        "dominant": dominant,
+        "bound_s": bound,
+        "roofline_fraction": (t_compute / bound) if bound > 0 else 0.0,
+        "flops": flops,
+        "bytes": bytes_accessed,
+        "collective_bytes": coll_b,
+        "n_chips": n_chips,
+    }
+
+
+def model_flops(n_params_active: int, n_tokens: int,
+                training: bool = True) -> float:
+    """MODEL_FLOPS = 6*N*D for training, 2*N*D for inference."""
+    per_tok = 6 if training else 2
+    return float(per_tok) * n_params_active * n_tokens
+
+
+def useful_fraction(mf: float, hlo_flops: float) -> float:
+    """MODEL_FLOPS / HLO_FLOPs — catches remat / redundancy waste.
+
+    HLO flops here are per-chip; ``mf`` must be per-chip too (divide the
+    global model FLOPs by n_chips before calling).
+    """
+    return mf / hlo_flops if hlo_flops else 0.0

@@ -1,0 +1,439 @@
+"""Loop-aware HLO cost analysis (FLOPs / bytes / collective bytes).
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE — for a
+scan-over-layers program that undercounts FLOPs by ~n_layers x, and it does
+not report collective bytes at all.  This module re-derives all three
+roofline inputs from the optimized HLO text with loop trip-count
+multiplication:
+
+  * computations are parsed into per-instruction (opcode, result shape,
+    operand shapes) records (operands resolved through a per-computation
+    SSA symbol table);
+  * ``dot`` FLOPs use the printed dnums (2 * prod(out) * prod(contracting));
+  * bytes-accessed follows XLA's own model: operands + result per
+    instruction, fusion internals excluded (a fusion node counts only its
+    boundary), data-movement-only ops (bitcast/tuple/gte/parameter)
+    excluded;
+  * the call graph (fusion ``calls=``, while ``body=``/``condition=``,
+    conditional branches, reduce ``to_apply=``) is walked recursively;
+    while bodies multiply by ``backend_config.known_trip_count`` (emitted
+    by XLA for lax.scan/fori) — fallback 1 with a warning flag;
+  * collectives (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute) accumulate operand bytes x trip multiplier.
+
+Validated against ``cost_analysis()`` on unrolled programs
+(tests/test_roofline.py) and against hand-counted GEMM FLOPs.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+# data-movement / metadata ops: no flops, no byte accounting of their own
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    "while", "conditional", "call", "custom-call", "rng-bit-generator",
+}
+
+_SHAPE_TOKEN = re.compile(
+    r"((?:[a-z][a-z0-9]*)\[[0-9,]*\])(?:\{[^}]*\})?")
+
+
+def _shape_bytes(tok: str) -> int:
+    m = re.match(r"([a-z][a-z0-9]*)\[([0-9,]*)\]", tok)
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _shape_dims(tok: str) -> list:
+    m = re.match(r"[a-z][a-z0-9]*\[([0-9,]*)\]", tok)
+    if not m or not m.group(1):
+        return []
+    return [int(d) for d in m.group(1).split(",") if d]
+
+
+def _balanced(s: str, start: int) -> int:
+    """Index just past the matching ')' for the '(' at ``start``."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+class Instruction:
+    __slots__ = ("name", "opcode", "result", "operands", "attrs", "raw")
+
+    def __init__(self, name, opcode, result, operands, attrs, raw):
+        self.name = name
+        self.opcode = opcode
+        self.result = result      # list of shape tokens (tuple flattened)
+        self.operands = operands  # list of operand %names
+        self.attrs = attrs        # trailing attribute text
+        self.raw = raw
+
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _parse_instruction(line: str) -> Instruction | None:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    # result type: balanced parens tuple or single shape token
+    if rest.startswith("("):
+        end = _balanced(rest, 0)
+        rtype = rest[:end]
+        rest2 = rest[end:].lstrip()
+    else:
+        sm = _SHAPE_TOKEN.match(rest)
+        if not sm:
+            return None
+        rtype = sm.group(0)
+        rest2 = rest[sm.end():].lstrip()
+    om = re.match(r"([\w\-]+)\(", rest2)
+    if not om:
+        return None
+    opcode = om.group(1)
+    op_end = _balanced(rest2, om.end() - 1)
+    op_text = rest2[om.end():op_end - 1]
+    operands = re.findall(r"%([\w.\-]+)", op_text)
+    attrs = rest2[op_end:]
+    result = re.findall(r"(?:[a-z][a-z0-9]*)\[[0-9,]*\]", rtype)
+    return Instruction(name, opcode, result, operands, attrs, line)
+
+
+def _parse_computations(text: str) -> dict:
+    """name -> list[Instruction].  Computations start at '%name (..' or
+    'ENTRY %name (..' at column 0 and end at a lone '}'."""
+    comps: dict = {}
+    cur = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        hdr = re.match(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$", line)
+        if hdr:
+            cur = hdr.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = comps[cur]
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            instr = _parse_instruction(line)
+            if instr is not None:
+                comps[cur].append(instr)
+    return comps
+
+
+def _dot_flops(instr: Instruction, shapes: dict) -> float:
+    out_elems = math.prod(_shape_dims(instr.result[0])) if instr.result else 0
+    lhs = shapes.get(instr.operands[0]) if instr.operands else None
+    ldims = _shape_dims(lhs[0]) if lhs else []
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+    contracted = 1
+    if cm and ldims:
+        for d in cm.group(1).split(","):
+            if d:
+                contracted *= ldims[int(d)]
+    return 2.0 * out_elems * contracted
+
+
+def _conv_flops(instr: Instruction, shapes: dict) -> float:
+    out_elems = math.prod(_shape_dims(instr.result[0])) if instr.result else 0
+    rhs = shapes.get(instr.operands[1]) if len(instr.operands) > 1 else None
+    kdims = _shape_dims(rhs[0]) if rhs else []
+    kernel = math.prod(kdims[:-1]) if kdims else 1  # spatial x in-ch
+    return 2.0 * out_elems * kernel
+
+
+_TRIP_RE = re.compile(r"known_trip_count\D*(\d+)")
+
+
+def _trip_count(instr: Instruction) -> int:
+    m = _TRIP_RE.search(instr.attrs)
+    return int(m.group(1)) if m else 1
+
+
+_CALLED_RE = re.compile(
+    r"(?:calls|body|condition|to_apply|branch_computations)=\{?%?"
+    r"([\w.\-]+(?:,\s*%[\w.\-]+)*)\}?")
+
+
+def _called_comps(instr: Instruction) -> list:
+    out = []
+    for m in re.finditer(r"(calls|body|condition|to_apply)=%([\w.\-]+)",
+                         instr.attrs):
+        out.append((m.group(1), m.group(2)))
+    bm = re.search(r"branch_computations=\{([^}]*)\}", instr.attrs)
+    if bm:
+        for nm in re.findall(r"%([\w.\-]+)", bm.group(1)):
+            out.append(("branch", nm))
+    return out
+
+
+def analyze_hlo(text: str) -> dict:
+    """Whole-program FLOPs / bytes / collective bytes with loop trips."""
+    comps = _parse_computations(text)
+    memo: dict = {}
+    warnings: list = []
+
+    def comp_cost(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        memo[name] = {"flops": 0.0, "bytes": 0.0,
+                      "coll": {k: 0.0 for k in COLLECTIVE_OPS},
+                      "coll_counts": {k: 0 for k in COLLECTIVE_OPS}}
+        instrs = comps.get(name, [])
+        shapes = {i.name: i.result for i in instrs}
+        total = memo[name]
+        for ins in instrs:
+            op = ins.opcode
+            # own flops
+            if op == "dot":
+                total["flops"] += _dot_flops(ins, shapes)
+            elif op == "convolution":
+                total["flops"] += _conv_flops(ins, shapes)
+            # own bytes
+            if op in ("dynamic-slice", "gather", "slice"):
+                # XLA's model: only the sliced/gathered bytes move, not
+                # the (possibly giant) source operand.
+                total["bytes"] += 2.0 * sum(_shape_bytes(t)
+                                            for t in ins.result)
+            elif op in ("dynamic-update-slice", "scatter"):
+                # read+write of the update region only.
+                upd = (shapes.get(ins.operands[1])
+                       if len(ins.operands) > 1 else None)
+                ub = (sum(_shape_bytes(t) for t in upd)
+                      if upd else sum(_shape_bytes(t) for t in ins.result))
+                total["bytes"] += 2.0 * ub
+            elif op not in _SKIP_BYTES and op not in ("fusion", "call",
+                                                      "async-start"):
+                b = sum(_shape_bytes(t) for t in ins.result)
+                for o in ins.operands:
+                    if o in shapes:
+                        b += sum(_shape_bytes(t) for t in shapes[o])
+                total["bytes"] += b
+            # collectives
+            if op in COLLECTIVE_OPS:
+                cb = 0
+                for o in ins.operands:
+                    if o in shapes:
+                        cb += sum(_shape_bytes(t) for t in shapes[o])
+                if cb == 0:
+                    cb = sum(_shape_bytes(t) for t in ins.result)
+                total["coll"][op] += cb
+                total["coll_counts"][op] += 1
+            # called computations
+            called = _called_comps(ins)
+            if not called:
+                continue
+            if op == "while":
+                trip = _trip_count(ins)
+                if trip == 1 and "known_trip_count" not in ins.attrs:
+                    warnings.append(f"while {ins.name}: unknown trip count")
+                for _, cn in called:
+                    sub = comp_cost(cn)
+                    _acc(total, sub, trip)
+            elif op == "conditional":
+                branches = [comp_cost(cn) for _, cn in called]
+                if branches:
+                    # conservative: the most expensive branch
+                    best = max(branches, key=lambda c: c["flops"] + c["bytes"])
+                    _acc(total, best, 1)
+            elif op in ("fusion", "call", "async-start"):
+                # bytes: min(boundary, internals) — boundary is right for
+                # elementwise fusions (intermediates stay in registers),
+                # internals are right when the fusion hides a dynamic-slice
+                # of a giant operand (boundary would count the full array).
+                boundary = sum(_shape_bytes(t) for t in ins.result)
+                for o in ins.operands:
+                    if o in shapes:
+                        boundary += sum(_shape_bytes(t) for t in shapes[o])
+                internal = 0.0
+                for _, cn in called:
+                    sub = comp_cost(cn)
+                    _acc(total, sub, 1, flops_only=True)
+                    internal += sub["bytes"]
+                total["bytes"] += min(boundary, internal) if internal \
+                    else boundary
+            elif op in ("reduce", "reduce-window", "scatter", "select-and-scatter",
+                        "map", "sort", "reduce-scatter", "all-reduce"):
+                pass  # applied per-element; elementwise cost negligible
+            else:
+                for _, cn in called:
+                    _acc(total, comp_cost(cn), 1)
+        return total
+
+    def _acc(total, sub, mult, flops_only=False):
+        total["flops"] += mult * sub["flops"]
+        if not flops_only:
+            total["bytes"] += mult * sub["bytes"]
+        for k in COLLECTIVE_OPS:
+            total["coll"][k] += mult * sub["coll"][k]
+            total["coll_counts"][k] += mult * sub["coll_counts"][k]
+
+    entry = comp_cost("__entry__") if "__entry__" in comps else {
+        "flops": 0.0, "bytes": 0.0,
+        "coll": {k: 0.0 for k in COLLECTIVE_OPS},
+        "coll_counts": {k: 0 for k in COLLECTIVE_OPS}}
+    coll = dict(entry["coll"])
+    coll["total"] = sum(coll.values())
+    return {
+        "flops": entry["flops"],
+        "bytes": entry["bytes"],
+        "collectives": coll,
+        "collective_counts": entry["coll_counts"],
+        "warnings": warnings,
+    }
+
+
+def attribute_hlo(text: str, top: int = 12) -> list:
+    """Per-computation attribution of the analyze_hlo totals (§Perf tool).
+
+    Returns [(bytes_contrib, flops_contrib, multiplier, name)] sorted by
+    byte contribution.  Control-flow (while/cond) multiplies; fusion-called
+    computations are folded into their caller (same rules as analyze_hlo),
+    so the rows sum to the analyze_hlo totals.
+    """
+    comps = _parse_computations(text)
+    if "__entry__" not in comps:
+        return []
+    # entry computation name (alias target)
+    entry_name = next(n for n, v in comps.items()
+                      if n != "__entry__" and v is comps["__entry__"])
+
+    memo_internal: dict = {}
+
+    def internal_bytes(name):  # fused-computation internals, min-rule free
+        if name in memo_internal:
+            return memo_internal[name]
+        tot = 0.0
+        instrs = comps.get(name, [])
+        shapes = {i.name: i.result for i in instrs}
+        for ins in instrs:
+            op = ins.opcode
+            if op in ("dynamic-slice", "gather", "slice"):
+                tot += 2.0 * sum(_shape_bytes(t) for t in ins.result)
+            elif op in ("dynamic-update-slice", "scatter"):
+                upd = (shapes.get(ins.operands[1])
+                       if len(ins.operands) > 1 else None)
+                tot += 2.0 * (sum(_shape_bytes(t) for t in upd) if upd
+                              else 0.0)
+            elif op in ("fusion", "call"):
+                for _, cn in _called_comps(ins):
+                    tot += internal_bytes(cn)
+            elif op not in _SKIP_BYTES:
+                b = sum(_shape_bytes(t) for t in ins.result)
+                for o in ins.operands:
+                    if o in shapes:
+                        b += sum(_shape_bytes(t) for t in shapes[o])
+                tot += b
+        memo_internal[name] = tot
+        return tot
+
+    def own_cost(name):
+        """Bytes/flops attributable to this computation itself (fusions
+        folded in; control-flow children excluded)."""
+        by = fl = 0.0
+        instrs = comps.get(name, [])
+        shapes = {i.name: i.result for i in instrs}
+        for ins in instrs:
+            op = ins.opcode
+            if op == "dot":
+                fl += _dot_flops(ins, shapes)
+            elif op == "convolution":
+                fl += _conv_flops(ins, shapes)
+            if op in ("dynamic-slice", "gather", "slice"):
+                by += 2.0 * sum(_shape_bytes(t) for t in ins.result)
+            elif op in ("dynamic-update-slice", "scatter"):
+                upd = (shapes.get(ins.operands[1])
+                       if len(ins.operands) > 1 else None)
+                by += 2.0 * (sum(_shape_bytes(t) for t in upd) if upd
+                             else 0.0)
+            elif op in ("fusion", "call", "async-start"):
+                boundary = sum(_shape_bytes(t) for t in ins.result)
+                for o in ins.operands:
+                    if o in shapes:
+                        boundary += sum(_shape_bytes(t) for t in shapes[o])
+                internal = sum(internal_bytes(cn)
+                               for _, cn in _called_comps(ins))
+                by += min(boundary, internal) if internal else boundary
+                for _, cn in _called_comps(ins):
+                    sub_fl = _comp_flops(cn)
+                    fl += sub_fl
+            elif op not in _SKIP_BYTES:
+                b = sum(_shape_bytes(t) for t in ins.result)
+                for o in ins.operands:
+                    if o in shapes:
+                        b += sum(_shape_bytes(t) for t in shapes[o])
+                by += b
+        return by, fl
+
+    memo_flops: dict = {}
+
+    def _comp_flops(name):
+        if name in memo_flops:
+            return memo_flops[name]
+        fl = 0.0
+        instrs = comps.get(name, [])
+        shapes = {i.name: i.result for i in instrs}
+        for ins in instrs:
+            if ins.opcode == "dot":
+                fl += _dot_flops(ins, shapes)
+            elif ins.opcode == "convolution":
+                fl += _conv_flops(ins, shapes)
+            elif ins.opcode in ("fusion", "call"):
+                for _, cn in _called_comps(ins):
+                    fl += _comp_flops(cn)
+        memo_flops[name] = fl
+        return fl
+
+    # multipliers via control-flow walk
+    mult: dict = {entry_name: 1.0}
+    order = [entry_name]
+    i = 0
+    while i < len(order):
+        cur = order[i]
+        i += 1
+        for ins in comps.get(cur, []):
+            if ins.opcode not in ("while", "conditional"):
+                continue
+            m = _trip_count(ins) if ins.opcode == "while" else 1
+            for _, cn in _called_comps(ins):
+                mult[cn] = mult.get(cn, 0.0) + mult[cur] * m
+                if cn not in order:
+                    order.append(cn)
+
+    rows = []
+    for name, m in mult.items():
+        by, fl = own_cost(name)
+        rows.append((by * m, fl * m, m, name))
+    rows.sort(reverse=True)
+    return rows[:top]

@@ -1,0 +1,9 @@
+"""Serving: prefill/decode engine with batched requests, INT8 KV helpers."""
+from .engine import (
+    Request,
+    ServingEngine,
+    dequantize_kv,
+    quantize_kv,
+)
+
+__all__ = ["Request", "ServingEngine", "dequantize_kv", "quantize_kv"]

@@ -1,0 +1,202 @@
+"""Serving engine: prefill/decode split with batched requests.
+
+Production pattern (vLLM-style, TPU-adapted):
+  * fixed-shape request slots (``max_batch``) so every decode step hits the
+    same compiled executable — no shape churn;
+  * prefill pads prompts to ``prefill_chunk`` buckets (one compile per
+    bucket, not per request) and installs caches/recurrent states into a
+    free slot — new requests join between decode steps (continuous
+    batching);
+  * decode advances ALL active slots one token per call (per-slot position
+    vector, vmapped over slots);
+  * finished slots are freed and re-usable;
+  * optional INT8 KV cache helpers (beyond-paper: APSQ-style PO2 scales
+    applied to cache pages — ``quantize_kv``/``dequantize_kv``).
+
+The engine is host-driven (python around two jit'd functions) — the
+launcher's ``serve.py`` runs it; the dry-run lowers ``serve_step`` from
+``repro.launch.dryrun`` directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step, init_decode_state
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray            # prompt
+    max_new_tokens: int = 32
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+# ---------------------------------------------------------------------------
+# INT8 KV cache (beyond-paper, APSQ-style PO2 scales)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jax.Array):
+    """Per-(batch, head) PO2-scale INT8 codes for KV cache pages.
+
+    x: [B, S, H, hd].  Scales are powers of two so dequant is a shift —
+    the same hardware argument the paper makes for PSUM scales (§II-B).
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(1, 3), keepdims=True)
+    exp = jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-8) / 127.0))
+    scale = jnp.exp2(exp)
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def dequantize_kv(codes: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (codes.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _batch_axes_tree(state, scan_layers: bool = True):
+    """Per-leaf slot axis: stacked unit states are [n_units, B, ...] -> 1;
+    unstacked / remainder states are [B, ...] -> 0."""
+    def f(path, a):
+        names = [str(getattr(p, "key", "")) for p in path]
+        return 1 if (scan_layers and "units" in names) else 0
+    return jax.tree_util.tree_map_with_path(f, state)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
+                 cache_len: int = 1024, prefill_chunk: int = 64,
+                 mesh=None, greedy: bool = True, temperature: float = 1.0,
+                 seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.prefill_chunk = prefill_chunk
+        self.mesh = mesh
+        self.greedy = greedy
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+
+        self.state = init_decode_state(cfg, max_batch, cache_len)
+        self.pos = np.zeros(max_batch, np.int32)      # next position per slot
+        self.slots: list = [None] * max_batch
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+
+    # -- jitted bodies ------------------------------------------------------
+
+    def _prefill_impl(self, params, state, tokens, slot, length):
+        """Prefill one slot.  tokens: [1, Lpad] (bucket-padded); slot and
+        length are traced scalars.  Steps the decode path token-by-token
+        (identical cache layout to decode); state updates beyond ``length``
+        are masked out so padding never pollutes recurrent state."""
+        cfg = self.cfg
+        fresh = init_decode_state(cfg, 1, self.cache_len)
+
+        def body(carry, tok_pos):
+            st, lg = carry
+            tok, pos = tok_pos
+            lg2, st2 = decode_step(params, cfg, st, tok[None, None], pos,
+                                   mesh=self.mesh)
+            valid = pos < length
+            st = jax.tree.map(lambda a, b: jnp.where(valid, b, a), st, st2)
+            lg = jnp.where(pos == length - 1, lg2[:, -1].astype(lg.dtype), lg)
+            return (st, lg), ()
+
+        lg0 = jnp.zeros((1, cfg.vocab), jnp.float32)
+        (st, lg), _ = jax.lax.scan(
+            body, (fresh, lg0),
+            (tokens[0], jnp.arange(tokens.shape[1], dtype=jnp.int32)))
+        axes = _batch_axes_tree(state, self.cfg.scan_layers)
+        new_state = jax.tree.map(
+            lambda full, s, ax: jax.lax.dynamic_update_slice_in_dim(
+                full, s.astype(full.dtype), slot, axis=ax),
+            state, st, axes)
+        return new_state, lg
+
+    def _decode_impl(self, params, state, tokens, pos, rng):
+        """One decode step for all slots.  tokens [B, 1], pos [B]."""
+        cfg = self.cfg
+        axes = _batch_axes_tree(state, self.cfg.scan_layers)
+
+        def one(st, tok, ps):
+            # vmap strips the slot axis; reinsert a size-1 batch dim.
+            st1 = jax.tree.map(lambda a, ax: jnp.expand_dims(a, ax),
+                               st, axes)
+            lg, st2 = decode_step(params, cfg, st1, tok[None], ps,
+                                  mesh=self.mesh)
+            st2 = jax.tree.map(lambda a, ax: jnp.squeeze(a, ax), st2, axes)
+            return lg[0, -1], st2
+
+        logits, new_state = jax.vmap(
+            one, in_axes=(axes, 0, 0), out_axes=(0, axes))(state, tokens, pos)
+        logits = logits / jnp.maximum(self.temperature, 1e-6)
+        if self.greedy:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            nxt = jax.random.categorical(rng, logits, axis=-1)
+        return nxt.astype(jnp.int32), new_state
+
+    # -- host API -----------------------------------------------------------
+
+    def add_request(self, req: Request) -> bool:
+        """Prefill into a free slot; False if engine full."""
+        try:
+            slot = self.slots.index(None)
+        except ValueError:
+            return False
+        L = int(len(req.tokens))
+        pad = -L % self.prefill_chunk
+        toks = np.pad(np.asarray(req.tokens, np.int32), (0, pad))[None]
+        self.state, logits = self._prefill(
+            self.params, self.state, jnp.asarray(toks),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(L, jnp.int32))
+        self.slots[slot] = req
+        self.pos[slot] = L
+        req.out.append(int(jnp.argmax(logits[0])))
+        return True
+
+    def step(self) -> list:
+        """One decode step for every active slot; returns finished requests."""
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return []
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].out[-1]
+        self.rng, sub = jax.random.split(self.rng)
+        nxt, self.state = self._decode(
+            self.params, self.state, jnp.asarray(tokens),
+            jnp.asarray(self.pos), sub)
+        nxt = np.asarray(nxt)
+        finished = []
+        for i in active:
+            r = self.slots[i]
+            r.out.append(int(nxt[i]))
+            self.pos[i] += 1
+            if (len(r.out) >= r.max_new_tokens
+                    or self.pos[i] >= self.cache_len - 1):
+                r.done = True
+                finished.append(r)
+                self.slots[i] = None
+        return finished
+
+    def run(self, requests: list) -> list:
+        """Continuous batching until every request completes."""
+        pending = list(requests)
+        done: list = []
+        while pending or any(s is not None for s in self.slots):
+            while pending and self.add_request(pending[0]):
+                pending.pop(0)
+            done.extend(self.step())
+        return done

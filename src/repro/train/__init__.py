@@ -1,0 +1,13 @@
+"""Training: sharded train_step factory + fault-tolerant host loop."""
+from .trainer import (
+    StragglerWatchdog,
+    TrainConfig,
+    Trainer,
+    make_grads_fn,
+    make_loss_fn,
+    make_train_step,
+    shardings_for_training,
+)
+
+__all__ = ["StragglerWatchdog", "TrainConfig", "Trainer", "make_grads_fn",
+           "make_loss_fn", "make_train_step", "shardings_for_training"]

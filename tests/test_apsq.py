@@ -1,0 +1,125 @@
+"""APSQ algorithm tests: Algorithm 1 semantics, scan == reference, fused
+GEMM == tile path, PSQ limit, gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    QuantConfig,
+    apsq_accumulate,
+    apsq_accumulate_reference,
+    apsq_matmul,
+    calibrate_dense,
+    effective_n_p,
+    psq_accumulate,
+    quant_dense,
+    quant_params_init,
+)
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.mark.parametrize("n_p", [1, 2, 3, 4, 5, 8, 9])
+@pytest.mark.parametrize("gs", [1, 2, 3, 4])
+def test_scan_matches_reference(n_p, gs):
+    key = jax.random.PRNGKey(n_p * 10 + gs)
+    tiles = jax.random.normal(key, (n_p, 4, 6)) * 20
+    las = jnp.linspace(-2, 3, n_p)
+    ref = apsq_accumulate_reference(tiles, las, gs)
+    out = apsq_accumulate(tiles, las, gs)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=1e-6, atol=1e-5)
+
+
+@given(st.integers(1, 10), st.integers(1, 6))
+def test_scan_matches_reference_property(n_p, gs):
+    key = jax.random.PRNGKey(n_p * 100 + gs)
+    tiles = jax.random.normal(key, (n_p, 3, 5)) * 15
+    las = jax.random.uniform(jax.random.fold_in(key, 1), (n_p,), minval=-2,
+                             maxval=4)
+    ref = apsq_accumulate_reference(tiles, las, gs)
+    out = apsq_accumulate(tiles, las, gs)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_psq_equals_apsq_with_full_group():
+    key = jax.random.PRNGKey(0)
+    tiles = jax.random.normal(key, (6, 4, 4)) * 10
+    las = jnp.linspace(-1, 2, 6)
+    np.testing.assert_allclose(
+        np.asarray(psq_accumulate(tiles, las)),
+        np.asarray(apsq_accumulate(tiles, las, gs=6)), atol=1e-5)
+
+
+def test_apsq_matmul_matches_tile_accumulate():
+    """Fused GEMM path == explicit tiles -> accumulate path."""
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (5, 24))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (24, 7))
+    n_p, gs = 4, 2
+    las = jnp.linspace(0, 2, n_p)
+    kt = 24 // n_p
+    tiles = jnp.einsum("bpk,pkn->pbn", x.reshape(5, n_p, kt),
+                       w.reshape(n_p, kt, 7))
+    ref = apsq_accumulate(tiles, las, gs)
+    out = apsq_matmul(x, w, las, n_p=n_p, gs=gs)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_gradients_flow_through_apsq():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (4, 16))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (16, 8)) * 0.3
+
+    def loss(w, las):
+        return jnp.sum(jnp.square(apsq_matmul(x, w, las, n_p=4, gs=2)))
+
+    gw, gl = jax.grad(loss, argnums=(0, 1))(w, jnp.zeros(4))
+    assert np.all(np.isfinite(np.asarray(gw)))
+    assert np.all(np.isfinite(np.asarray(gl)))
+    assert float(jnp.sum(jnp.abs(gl))) > 0  # PSUM scales are learnable
+
+
+def test_effective_n_p():
+    assert effective_n_p(24, 8) == 8
+    assert effective_n_p(24, 7) == 6
+    assert effective_n_p(7, 8) == 7
+    assert effective_n_p(16, 5) == 4
+
+
+@pytest.mark.parametrize("mode", ["psq", "apsq"])
+def test_quant_dense_error_small_after_calibration(mode):
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (16, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 32)) * 0.1
+    cfg = (QuantConfig.apsq(gs=2, n_p=8) if mode == "apsq"
+           else QuantConfig.psq(n_p=8))
+    qp = calibrate_dense(quant_params_init(w, cfg), x, w, cfg)
+    y = quant_dense(x, w, qp, cfg)
+    ref = x @ w
+    rel = float(jnp.mean(jnp.abs(y - ref)) / jnp.mean(jnp.abs(ref)))
+    assert rel < 0.25, rel
+
+
+def test_grouping_reduces_error_vs_gs1():
+    """Paper Table I: larger gs reduces cascaded rounding error (on
+    average).  Check total squared error over a batch of random GEMMs."""
+    key = jax.random.PRNGKey(4)
+    errs = {}
+    for gs in (1, 4):
+        tot = 0.0
+        for i in range(8):
+            k = jax.random.fold_in(key, i)
+            x = jax.random.normal(k, (8, 64))
+            w = jax.random.normal(jax.random.fold_in(k, 1), (64, 16)) * 0.2
+            cfg = QuantConfig.apsq(gs=gs, n_p=8)
+            qp = calibrate_dense(quant_params_init(w, cfg), x, w, cfg)
+            y = quant_dense(x, w, qp, cfg)
+            tot += float(jnp.sum(jnp.square(y - x @ w)))
+        errs[gs] = tot
+    assert errs[4] < errs[1], errs

@@ -1,0 +1,143 @@
+"""Attention: chunked == naive, local windows, decode == full forward."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    decode_attention,
+    local_attention,
+    multi_head_attention,
+    update_kv_cache,
+)
+from repro.models.common import apply_rope
+
+
+def _naive(q, k, v, causal=True, window=None):
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.reshape(B, S, Hkv, G, hd),
+                   k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((S, S), bool)) if causal else jnp.ones((S, S),
+                                                                    bool)
+    if window is not None:
+        mask &= (jnp.arange(S)[:, None] - jnp.arange(S)[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v).reshape(B, S, Hq, hd)
+
+
+@pytest.mark.parametrize("chunk_q,chunk_kv", [(16, 16), (8, 32), (64, 64),
+                                              (100, 100)])
+def test_chunked_matches_naive(chunk_q, chunk_kv):
+    key = jax.random.PRNGKey(0)
+    B, S, Hq, Hkv, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(key, (B, S, Hq, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, hd))
+    out = multi_head_attention(q, k, v, causal=True, chunk_q=chunk_q,
+                               chunk_kv=chunk_kv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_naive(q, k, v)),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_chunked_non_causal():
+    key = jax.random.PRNGKey(1)
+    B, S, H, hd = 1, 48, 2, 8
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    out = multi_head_attention(q, k, v, causal=False, chunk_q=16,
+                               chunk_kv=16)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(_naive(q, k, v, causal=False)),
+        rtol=2e-2, atol=2e-3)
+
+
+def test_cross_attention_different_lengths():
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (2, 10, 4, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 24, 4, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 24, 4, 8))
+    out = multi_head_attention(q, k, v, causal=False, chunk_q=4, chunk_kv=8)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(8)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-2,
+                               atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [8, 16, 33])
+def test_local_matches_windowed_naive(window):
+    key = jax.random.PRNGKey(3)
+    B, S, Hq, Hkv, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(key, (B, S, Hq, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, hd))
+    out = local_attention(q, k, v, window=window, chunk_q=16)
+    ref = _naive(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-2,
+                               atol=2e-3)
+
+
+def test_decode_matches_last_row():
+    key = jax.random.PRNGKey(4)
+    B, S, Hq, Hkv, hd = 2, 32, 4, 2, 16
+    q = jax.random.normal(key, (B, S, Hq, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, hd))
+    ref = _naive(q, k, v)
+    kc = jnp.zeros((B, S, Hkv, hd))
+    vc = jnp.zeros((B, S, Hkv, hd))
+    kc, vc = update_kv_cache(kc, vc, k, v, 0)
+    out = decode_attention(q[:, -1:], kc, vc, S - 1)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref[:, -1]),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_ring_cache_decode_matches_window():
+    """Ring-buffer decode == windowed attention at the same position."""
+    key = jax.random.PRNGKey(5)
+    B, S, H, hd, W = 1, 40, 2, 8, 16
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    ref = _naive(q, k, v, causal=True, window=W)
+    kc = jnp.zeros((B, W, H, hd))
+    vc = jnp.zeros((B, W, H, hd))
+    for t in range(S):
+        kc, vc = update_kv_cache(kc, vc, k[:, t:t + 1], v[:, t:t + 1], t,
+                                 ring=True)
+        out = decode_attention(q[:, t:t + 1], kc, vc, t, window=W, ring=True)
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(ref[:, t]),
+                                   rtol=2e-2, atol=2e-3)
+
+
+def test_rope_rotation_preserves_norm_and_relativity():
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (1, 8, 2, 16))
+    pos = jnp.arange(8)
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 16))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.asarray([i]))
+        kj = apply_rope(k, jnp.asarray([j]))
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+
+
+def test_rope_fraction_passthrough():
+    """ChatGLM3 2D RoPE: second half of head dims untouched."""
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (1, 4, 1, 16))
+    y = apply_rope(x, jnp.arange(4), fraction=0.5)
+    np.testing.assert_allclose(np.asarray(x[..., 8:]), np.asarray(y[..., 8:]))
+    assert not np.allclose(np.asarray(x[..., :8]), np.asarray(y[..., :8]))

@@ -1,0 +1,134 @@
+"""Pallas APSQ kernel: bit-exact vs the pure-jnp integer oracle.
+
+Sweeps shapes / gs / n_p / adversarial exponents in interpret mode (the
+kernel body executes in Python on CPU; on TPU the same BlockSpecs run on
+hardware).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.apsq_matmul import (
+    accumulator_vmem_bytes,
+    apsq_matmul_f32,
+    apsq_matmul_int8,
+    apsq_matmul_ref,
+    baseline_matmul_int8,
+    baseline_matmul_ref,
+    choose_exps,
+    dequantize_psum,
+    quantize_psum,
+    rshift_round,
+)
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def _codes(key, shape):
+    return jax.random.randint(key, shape, -128, 128, jnp.int8)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 32, 16), (16, 64, 32), (32, 128, 128),
+                                   (8, 40, 16), (130, 96, 130)])
+@pytest.mark.parametrize("gs", [1, 2, 3, 4])
+def test_kernel_bit_exact_vs_oracle(m, k, n, gs):
+    key = jax.random.PRNGKey(m * 1000 + k + gs)
+    for n_p in (1, 2, 4):
+        if k % n_p:
+            continue
+        x = _codes(key, (m, k))
+        w = _codes(jax.random.fold_in(key, 1), (k, n))
+        exps = choose_exps(x, w, n_p=n_p, gs=gs)
+        ref = apsq_matmul_ref(x, w, exps, n_p=n_p, gs=gs)
+        out = apsq_matmul_int8(x, w, exps, gs=gs, interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+@given(st.integers(1, 8), st.integers(1, 5), st.integers(0, 10))
+def test_kernel_property_shapes(n_p, gs, seed):
+    key = jax.random.PRNGKey(seed)
+    m, n = 8, 16
+    k = n_p * 8
+    x = _codes(key, (m, k))
+    w = _codes(jax.random.fold_in(key, 1), (k, n))
+    exps = choose_exps(x, w, n_p=n_p, gs=gs)
+    ref = apsq_matmul_ref(x, w, exps, n_p=n_p, gs=gs)
+    out = apsq_matmul_int8(x, w, exps, gs=gs, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_adversarial_exponents():
+    """Extreme exponents (0 and large) must clip/shift identically."""
+    key = jax.random.PRNGKey(7)
+    x = _codes(key, (8, 32))
+    w = _codes(jax.random.fold_in(key, 1), (32, 16))
+    for exps in ([0, 0, 0, 0], [20, 20, 20, 20], [0, 20, 0, 20]):
+        e = jnp.asarray(exps, jnp.int32)
+        ref = apsq_matmul_ref(x, w, e, n_p=4, gs=2)
+        out = apsq_matmul_int8(x, w, e, gs=2, interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_baseline_kernel_equals_int_matmul():
+    key = jax.random.PRNGKey(8)
+    x = _codes(key, (16, 64))
+    w = _codes(jax.random.fold_in(key, 1), (64, 32))
+    out = baseline_matmul_int8(x, w, n_p=4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(baseline_matmul_ref(x, w)),
+                                  np.asarray(out))
+
+
+def test_rshift_round_half_up():
+    v = jnp.asarray([5, -5, 6, -6, 7], jnp.int32)
+    # (v + 2) >> 2 == round-half-up(v / 4): 1.25->1, -1.25->-1, 1.5->2,
+    # -1.5->-1 (half rounds toward +inf), 1.75->2
+    np.testing.assert_array_equal(np.asarray(rshift_round(v, 2)),
+                                  [1, -1, 2, -1, 2])
+    np.testing.assert_array_equal(np.asarray(rshift_round(v, 0)),
+                                  np.asarray(v))
+
+
+def test_quant_dequant_roundtrip_within_one_lsb():
+    v = jnp.arange(-500, 500, 7, dtype=jnp.int32)
+    e = jnp.asarray(3, jnp.int32)
+    code = quantize_psum(v, e)
+    back = dequantize_psum(code, e)
+    assert int(jnp.max(jnp.abs(back - v))) <= 2 ** 3 // 2 + 1
+
+
+def test_apsq_error_bounded_vs_exact():
+    """APSQ output within a few shifted LSBs of the exact INT32 GEMM."""
+    key = jax.random.PRNGKey(9)
+    x = _codes(key, (16, 64))
+    w = _codes(jax.random.fold_in(key, 1), (64, 32))
+    exact = baseline_matmul_ref(x, w)
+    for gs in (1, 2, 4):
+        exps = choose_exps(x, w, n_p=8, gs=gs)
+        out = apsq_matmul_ref(x, w, exps, n_p=8, gs=gs)
+        lsb = 2.0 ** float(jnp.max(exps))
+        err = float(jnp.max(jnp.abs((out - exact))))
+        assert err <= lsb * (8 / gs + 2), (gs, err, lsb)
+
+
+def test_f32_wrapper_scales():
+    key = jax.random.PRNGKey(10)
+    x = jax.random.normal(key, (8, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 16)) * 0.1
+    ax = float(jnp.max(jnp.abs(x))) / 127
+    aw = float(jnp.max(jnp.abs(w))) / 127
+    xq = jnp.clip(jnp.round(x / ax), -128, 127).astype(jnp.int8)
+    wq = jnp.clip(jnp.round(w / aw), -128, 127).astype(jnp.int8)
+    exps = choose_exps(xq, wq, n_p=4, gs=2)
+    y = apsq_matmul_f32(x, w, exps, gs=2, ax=ax, aw=aw, interpret=True)
+    rel = float(jnp.mean(jnp.abs(y - x @ w)) / jnp.mean(jnp.abs(x @ w)))
+    assert rel < 0.1, rel
+
+
+def test_accumulator_working_set():
+    b = accumulator_vmem_bytes(128, 128, gs=1)
+    assert b["apsq_banks"] * 4 == b["baseline_int32"]  # beta 4 -> 1
+    b4 = accumulator_vmem_bytes(128, 128, gs=4)
+    assert b4["apsq_banks"] == b4["baseline_int32"]  # parity at gs=4

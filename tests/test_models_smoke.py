@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward
+and one train step on CPU, asserting output shapes + no NaNs (assignment
+requirement), plus decode-state stability."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, cells_for, get_config, get_smoke
+from repro.core import QuantConfig
+from repro.models.model import (
+    decode_step,
+    encode,
+    forward,
+    init_decode_state,
+    init_lm,
+    lm_loss,
+    lm_specs,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=8):
+    tok = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    kw = {}
+    if cfg.frontend == "vision":
+        kw["embeds"] = jax.random.normal(
+            KEY, (B, cfg.n_frontend_tokens, cfg.d_model))
+    if cfg.encdec:
+        kw["enc_embeds"] = jax.random.normal(KEY, (B, S, cfg.d_model))
+    return tok, kw
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_forward(name):
+    cfg = get_smoke(name)
+    p = init_lm(KEY, cfg)
+    tok, kw = _batch(cfg)
+    logits = forward(p, cfg, tok, **kw)
+    exp_s = 8 + (cfg.n_frontend_tokens if cfg.frontend == "vision" else 0)
+    assert logits.shape == (2, exp_s, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits))), name
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_train_step(name):
+    cfg = get_smoke(name)
+    p = init_lm(KEY, cfg)
+    tok, kw = _batch(cfg)
+
+    def loss_fn(p):
+        lg = forward(p, cfg, tok, **kw)
+        return lm_loss(lg[:, -tok.shape[1]:], tok)
+
+    loss, grads = jax.value_and_grad(loss_fn)(p)
+    assert np.isfinite(float(loss)), name
+    finite = [bool(jnp.all(jnp.isfinite(g))) for g in jax.tree.leaves(grads)]
+    assert all(finite), name
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_decode_state_stable(name):
+    """decode_step returns a state tree with identical structure/shapes/
+    dtypes (required for repeated jit-free decode)."""
+    cfg = get_smoke(name)
+    p = init_lm(KEY, cfg)
+    st = init_decode_state(cfg, 2, 16)
+    enc_out = None
+    if cfg.encdec:
+        enc_out = encode(p, cfg, jax.random.normal(KEY, (2, 8, cfg.d_model)))
+    tok = jax.random.randint(KEY, (2, 1), 0, cfg.vocab)
+    lg, st2 = decode_step(p, cfg, st, tok, jnp.asarray(0), enc_out=enc_out)
+    assert lg.shape == (2, 1, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(lg)))
+    assert jax.tree.structure(st) == jax.tree.structure(st2)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st2)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "rwkv6-3b",
+                                  "olmoe-1b-7b", "recurrentgemma-2b"])
+def test_smoke_apsq_quantized_forward(name):
+    """The paper's feature composes with every family."""
+    cfg = get_smoke(name).with_quant(QuantConfig.apsq(gs=2, n_p=4))
+    p = init_lm(KEY, cfg)
+    tok, kw = _batch(cfg)
+    logits = forward(p, cfg, tok, **kw)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_full_config_registry(name):
+    cfg = get_config(name)
+    cfg.validate()
+    cells = cells_for(name)
+    assert "train_4k" in cells and "decode_32k" in cells
+    if name in ("rwkv6-3b", "recurrentgemma-2b"):
+        assert "long_500k" in cells
+    else:
+        assert "long_500k" not in cells
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_specs_tree_matches_params(name):
+    cfg = get_smoke(name)
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), KEY)
+    specs = lm_specs(cfg)
+    # every param leaf must have a logical-axes tuple at the same path
+    jax.tree.map(lambda sp, sh: None, specs, shapes,
+                 is_leaf=lambda x: isinstance(x, tuple))
+
+
+def test_decode_matches_forward_tinyllama():
+    """Greedy continuation via decode == full forward (cache correctness)."""
+    cfg = get_smoke("tinyllama-1.1b")
+    p = init_lm(KEY, cfg)
+    S = 12
+    tok = jax.random.randint(KEY, (1, S), 0, cfg.vocab)
+    full = forward(p, cfg, tok)
+    st = init_decode_state(cfg, 1, 32)
+    outs = []
+    for t in range(S):
+        lg, st = decode_step(p, cfg, st, tok[:, t:t + 1], jnp.asarray(t))
+        outs.append(lg)
+    stepped = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(stepped),
+                               rtol=5e-2, atol=5e-3)

@@ -1,0 +1,168 @@
+"""Sharding rules, gradient compression math, HLO cost analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import (
+    dequantize_grad,
+    optimizer_spec,
+    quantize_grad,
+    spec_for,
+    tree_specs,
+)
+from repro.roofline import analyze_hlo, cost_terms, model_flops
+from repro.launch.mesh import make_smoke_mesh
+
+
+class FakeMesh:
+    """Minimal stand-in with axis_names/shape (no devices needed)."""
+
+    def __init__(self, shape: dict):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+
+
+MESH = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+# ------------------------------ sharding rules ----------------------------
+
+def test_spec_for_basic_tp():
+    s = spec_for(("embed", "ff"), (4096, 11008), MESH)
+    assert s == P("data", "model")
+
+
+def test_spec_for_divisibility_fallback():
+    # 40 heads % 16 != 0 -> replicate that axis
+    s = spec_for(("batch", None, "heads", None), (32, 1, 40, 64), MESH)
+    assert s[2] is None
+    assert s[0] == ("pod", "data")
+
+
+def test_spec_for_batch_fallback_to_data():
+    # batch 16 not divisible by pod*data=32 -> falls back to data(16)
+    s = spec_for(("batch", None), (16, 128), MESH)
+    assert s[0] == "data"
+    # batch 3 -> fully replicated
+    s = spec_for(("batch", None), (3, 128), MESH)
+    assert s == P(None, None)
+
+
+def test_spec_for_no_axis_reuse():
+    # both dims want "model": second falls back to replication
+    s = spec_for(("ff", "vocab"), (1536, 151936), MESH)
+    assert s == P("model", None)
+
+
+def test_optimizer_spec_zero1():
+    s = optimizer_spec(P("data", "model"), (4096, 8192), MESH)
+    assert s == P("data", "model")  # nothing replicated -> unchanged
+    s = optimizer_spec(P(None, "model"), (4096, 8192), MESH)
+    assert s == P("pod", "model")  # first replicated divisible dim -> pod
+
+
+def test_tree_specs_structure():
+    spec_tree = {"a": ("embed", "ff"), "b": {"c": ("norm",)}}
+    shape_tree = {"a": jax.ShapeDtypeStruct((64, 32), jnp.float32),
+                  "b": {"c": jax.ShapeDtypeStruct((7,), jnp.float32)}}
+    out = tree_specs(spec_tree, shape_tree, MESH)
+    assert out["a"] == P("data", "model")
+    assert out["b"]["c"] == P(None)
+
+
+# ------------------------------ compression -------------------------------
+
+def test_grad_quantize_roundtrip_error():
+    g = jax.random.normal(jax.random.PRNGKey(0), (1024,))
+    codes, scale = quantize_grad(g)
+    back = dequantize_grad(codes, scale)
+    assert codes.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(back - g))) <= float(scale) * 0.5 + 1e-7
+
+
+def test_grad_compression_error_feedback_converges():
+    """With error feedback, the accumulated quantized sum tracks the true
+    sum (residual stays bounded)."""
+    g = jax.random.normal(jax.random.PRNGKey(1), (256,)) * 1e-3
+    residual = jnp.zeros_like(g)
+    acc_q = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for i in range(20):
+        gi = g * (1 + 0.1 * i)
+        x = gi + residual
+        codes, scale = quantize_grad(x)
+        back = dequantize_grad(codes, scale)
+        residual = x - back
+        acc_q = acc_q + back
+        acc = acc + gi
+    rel = float(jnp.linalg.norm(acc_q - acc) / jnp.linalg.norm(acc))
+    assert rel < 0.05, rel
+
+
+# ------------------------------ roofline ----------------------------------
+
+def test_analyze_hlo_matches_cost_analysis_unrolled():
+    def f(x, w):
+        for _ in range(3):
+            x = jnp.tanh(x @ w)
+        return x
+    xs = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = jax.jit(f).lower(xs, ws).compile()
+    r = analyze_hlo(c.as_text())
+    ca = c.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    assert r["flops"] == pytest.approx(float(ca["flops"]), rel=0.01)
+
+
+def test_analyze_hlo_scan_trip_multiplication():
+    def body(c, w):
+        return c @ w, ()
+    def f(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+    xs = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 64, 64), jnp.float32)
+    c = jax.jit(f).lower(xs, ws).compile()
+    r = analyze_hlo(c.as_text())
+    assert r["flops"] == pytest.approx(2 * 32 * 64 * 64 * 7, rel=1e-6)
+
+
+def test_analyze_hlo_grad_shows_remat_waste():
+    def body(c, w):
+        return jax.checkpoint(lambda a, b: jnp.tanh(a @ b))(c, w), ()
+    def loss(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(y)
+    xs = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    c = jax.jit(jax.grad(loss)).lower(xs, ws).compile()
+    r = analyze_hlo(c.as_text())
+    fwd = 2 * 32 * 64 * 64 * 5
+    assert r["flops"] == pytest.approx(3 * fwd, rel=0.05)  # recompute + 2 bwd
+
+
+def test_cost_terms_dominant():
+    t = cost_terms({"flops": 197e12, "bytes accessed": 819e9 * 2},
+                   {"total": 0}, n_chips=1)
+    assert t["dominant"] == "memory_s"
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(2.0)
+    assert t["roofline_fraction"] == pytest.approx(0.5)
+
+
+def test_model_flops():
+    assert model_flops(1_000_000, 100, training=True) == 6e8
+    assert model_flops(1_000_000, 100, training=False) == 2e8
+
+
+def test_smoke_mesh_constraint_roundtrip():
+    """with_sharding_constraint under the 1-device production-named mesh."""
+    mesh = make_smoke_mesh()
+    from jax.sharding import NamedSharding
+    f = jax.jit(lambda x: jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P("data", None))) * 2)
+    y = f(jnp.ones((4, 4)))
+    np.testing.assert_array_equal(np.asarray(y), 2 * np.ones((4, 4)))
