@@ -31,7 +31,7 @@ def train_qat(cfg: ModelConfig, steps: int = 60, lr: float = 3e-3,
     across gs (observed; the paper also calibrates before QAT)."""
     corpus = SyntheticCorpus(QAT_DATA)
     params = init_lm(jax.random.PRNGKey(seed), cfg)
-    if cfg.quant.enabled:
+    if cfg.policy is not None:
         from repro.quant import calibrate_model
         b0 = corpus.batch_at(999)
         params = calibrate_model(params, cfg,
@@ -68,11 +68,9 @@ def train_qat(cfg: ModelConfig, steps: int = 60, lr: float = 3e-3,
 
 
 def quant_variants(gs_values=(1, 2, 3, 4), n_p: int = 8) -> dict:
-    out = {"baseline_w8a8": QuantConfig.w8a8()}
-    for gs in gs_values:
-        out[f"apsq_gs{gs}"] = QuantConfig.apsq(gs=gs, n_p=n_p)
-    out["psq"] = QuantConfig.psq(n_p=n_p)
-    return out
+    """Named per-layer policies (uniform) for the accuracy sweep."""
+    from repro.quant import quant_variants as _qv
+    return _qv(gs_values=gs_values, n_p=n_p)
 
 
 def timed(fn, *args, reps: int = 5, warmup: int = 2):

@@ -7,9 +7,13 @@
 2. Run the true-integer Pallas kernel (interpret mode on CPU) and verify
    it agrees bit-exactly with the integer oracle.
 3. Ask the paper's analytical accelerator model what that buys in energy.
+4. Per-layer policy on a whole model: attention GEMMs at gs=2/n_p=4,
+   FFN GEMMs at gs=4/n_p=8 (the RAE reconfigures per layer), capture-based
+   calibration, integer export, and deployed serving.
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import (QuantConfig, calibrate_dense, quant_dense,
                         quant_params_init)
@@ -54,3 +58,40 @@ e8 = layer_energy(layer, acc, "WS", psum_bits=8, gs=2)
 print(f"\nBERT FFN layer, WS dataflow: INT32-PSUM {e32['total']:.2e} J "
       f"-> APSQ INT8 {e8['total']:.2e} J "
       f"({100 * (1 - e8['total'] / e32['total']):.0f}% saved)")
+
+# --- 4. per-layer policy -> calibrate -> export -> integer serving ----------
+from repro.models.config import ModelConfig
+from repro.models.model import forward, init_lm
+from repro.quant import QuantPolicy, calibrate_model, export_quantized
+from repro.serving import Request, ServingEngine
+
+policy = QuantPolicy.of(
+    ("*.mix.*", QuantConfig.apsq(gs=2, n_p=4)),   # attention projections
+    ("*.ffn.*", QuantConfig.apsq(gs=4, n_p=8)),   # FFN projections
+    default=QuantConfig.w8a8(),                   # everything else W8A8
+)
+cfg = ModelConfig(name="quickstart", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                  dtype="float32", scan_layers=False).with_quant(policy)
+params = init_lm(jax.random.PRNGKey(3), cfg)
+wq_spec = params["units"]["u0"]["0"]["mix"]["wq"]["qp"].spec
+wi_spec = params["units"]["u0"]["0"]["ffn"]["wi"]["qp"].spec
+print(f"\nper-layer policy: mix.wq -> gs={wq_spec.psum.gs} "
+      f"n_p={wq_spec.psum.n_p}; ffn.wi -> gs={wi_spec.psum.gs} "
+      f"n_p={wi_spec.psum.n_p}")
+
+tok = jax.random.randint(jax.random.PRNGKey(4), (2, 16), 0, cfg.vocab)
+params = calibrate_model(params, cfg, {"tokens": tok})   # capture-based
+logits = forward(params, cfg, tok)
+print(f"calibrated QAT forward: {logits.shape}, "
+      f"finite={bool(jnp.all(jnp.isfinite(logits)))}")
+
+deploy, report = export_quantized(params)
+int8_total = sum(r["int8_bytes"] * r["count"] for r in report.values())
+print(f"export: {len(report)} layer groups, {int8_total / 1024:.0f} KiB of "
+      f"INT8 weight codes")
+engine = ServingEngine(deploy, cfg, max_batch=2, cache_len=64,
+                       prefill_chunk=8)
+done = engine.run([Request(uid=0, tokens=np.arange(6) % cfg.vocab,
+                           max_new_tokens=8)])
+print(f"integer-deployed engine decoded: {done[0].out}")

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 CI entrypoint: install dev deps and run the test suite.
+# Collection regressions (missing modules, import errors) fail the run
+# because pytest errors out before running a single test.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install --quiet -r requirements-dev.txt
+python -m pip install --quiet "jax>=0.4.30" numpy 2>/dev/null || true
+
+python -m pytest -x -q "$@"

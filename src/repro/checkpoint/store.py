@@ -13,11 +13,17 @@ Fault-tolerance posture for 1000+ nodes:
   * ``restore`` takes an optional ``shardings`` tree and ``jax.device_put``s
     each leaf with the *current* mesh's sharding — elastic restart onto a
     different pod count reshards transparently;
+  * quantizer state (``repro.core.QuantState``) round-trips: data fields
+    are written as ordinary leaves and the static spec/name metadata goes
+    into the manifest (``quant_states``), so ``restore`` rebuilds typed
+    states; pre-API-v2 checkpoints (raw ``{"aw","ax","ap"}`` dicts under
+    ``qp`` keys) are upgraded on load when a ``quant_policy`` is passed;
   * emergency checkpoints: ``install_signal_handler`` saves on SIGTERM
     (preemption) before re-raising.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import shutil
@@ -27,17 +33,56 @@ import threading
 import jax
 import numpy as np
 
+from repro.core import (DeployedQuantState, PsumQuantConfig, QuantConfig,
+                        QuantState)
+
 _SEP = "/"
 
 
-def _flatten(tree, prefix=""):
+def _spec_to_json(spec: QuantConfig | None):
+    if spec is None:
+        return None
+    d = dataclasses.asdict(spec)
+    return d
+
+
+def _spec_from_json(d) -> QuantConfig | None:
+    if d is None:
+        return None
+    # read-only: ``d`` aliases manifest["quant_states"][...]["spec"], which
+    # restore() hands back to the caller intact
+    psum = PsumQuantConfig(**d["psum"])
+    rest = {k: v for k, v in d.items() if k != "psum"}
+    return QuantConfig(psum=psum, **rest)
+
+
+def _flatten(tree, prefix="", quant_meta: dict | None = None):
     out = {}
+    if isinstance(tree, QuantState):
+        if quant_meta is not None:
+            quant_meta[prefix] = {"kind": "QuantState",
+                                  "spec": _spec_to_json(tree.spec),
+                                  "name": tree.name}
+        return _flatten(tree.as_dict(), prefix, quant_meta)
+    if isinstance(tree, DeployedQuantState):
+        if quant_meta is not None:
+            quant_meta[prefix] = {"kind": "DeployedQuantState",
+                                  "spec": _spec_to_json(tree.spec),
+                                  "name": tree.name,
+                                  "out_dims": list(tree.out_dims)}
+        d = {"w_codes": tree.w_codes, "ax_exp": tree.ax_exp,
+             "aw_exp": tree.aw_exp}
+        if tree.psum_exps is not None:
+            d["psum_exps"] = tree.psum_exps
+        return _flatten(d, prefix, quant_meta)
     if isinstance(tree, dict):
         for k, v in tree.items():
-            out.update(_flatten(v, f"{prefix}{_SEP}{k}" if prefix else k))
+            out.update(_flatten(v, f"{prefix}{_SEP}{k}" if prefix else k,
+                                quant_meta))
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
-            out.update(_flatten(v, f"{prefix}{_SEP}{i}" if prefix else str(i)))
+            out.update(_flatten(v, f"{prefix}{_SEP}{i}" if prefix else str(i),
+                                quant_meta))
     else:
         out[prefix] = tree
     return out
@@ -54,19 +99,134 @@ def _unflatten(flat: dict):
     return root
 
 
+def _tree_get(tree, parts):
+    for p in parts:
+        if not isinstance(tree, dict) or p not in tree:
+            return None
+        tree = tree[p]
+    return tree
+
+
+def _tree_set(tree, parts, value):
+    node = tree
+    for p in parts[:-1]:
+        node = node[p]
+    node[parts[-1]] = value
+
+
+def _reify_quant_states(tree: dict, quant_meta: dict) -> dict:
+    """Rebuild typed quantizer nodes recorded in the manifest (in place)."""
+    for path, meta in quant_meta.items():
+        parts = path.split(_SEP)
+        node = _tree_get(tree, parts)
+        if not isinstance(node, dict):
+            continue
+        kind = meta.get("kind", "QuantState")
+        if kind == "DeployedQuantState" and "w_codes" in node:
+            _tree_set(tree, parts, DeployedQuantState(
+                w_codes=node["w_codes"], ax_exp=node["ax_exp"],
+                aw_exp=node["aw_exp"], psum_exps=node.get("psum_exps"),
+                spec=_spec_from_json(meta["spec"]),
+                name=meta.get("name", ""),
+                out_dims=tuple(meta.get("out_dims", ()))))
+        elif "aw" in node and "ax" in node:
+            _tree_set(tree, parts, QuantState.from_dict(
+                node, spec=_spec_from_json(meta["spec"]),
+                name=meta.get("name", "")))
+    return tree
+
+
+_MODEL_ROOTS = ("units", "rem", "encoder", "head", "frontend_proj")
+
+
+def _legacy_layer_name(parts) -> str:
+    """Map an old checkpoint path to the API-v2 stable layer name.
+
+    ``params/units/u0/1/mix/wq/qp`` -> ``unit.1.mix.wq``;
+    ``opt/m/rem/0/ffn/wi/qp``       -> ``rem.0.ffn.wi``.
+
+    Leading container segments (``params``, ``opt/m``, ``opt/v``, ...)
+    are stripped up to the first model root so the optimizer-moment
+    mirrors of a quantizer get the *same* name/spec as the param itself —
+    the metadata is treedef aux data, and jax.tree.map over (params,
+    moments) requires identical treedefs.
+    """
+    parts = [p for p in parts if p != "qp"]
+    for i, p in enumerate(parts):
+        if p in _MODEL_ROOTS:
+            parts = parts[i:]
+            break
+    out = []
+    i = 0
+    while i < len(parts):
+        p = parts[i]
+        if p == "units":
+            out.append("unit")
+            nxt = parts[i + 1] if i + 1 < len(parts) else ""
+            if nxt.startswith("u") and nxt[1:].isdigit():
+                i += 1  # drop the per-unit index: names are per position
+        else:
+            out.append(p)
+        i += 1
+    return ".".join(out)
+
+
+_DROP = object()
+
+# Legacy layer names whose quantizer state was vestigial: old
+# init_rwkv_channel_mix created qp for the sigmoid gate ``wr`` although the
+# apply path always ran it unquantized (API v2 no longer creates it).
+# Upgrading it would silently start quantizing the gate AND give the
+# restored tree a different treedef than a fresh v2 init, so drop it.
+_LEGACY_VESTIGIAL_SUFFIXES = (".ffn.wr",)
+
+
+def _upgrade_legacy_quant(tree, quant_policy):
+    """Wrap pre-v2 ``{"aw","ax","ap"}`` dicts into typed ``QuantState``s,
+    resolving each layer's spec from ``quant_policy`` by its path-derived
+    name (``quant_policy`` may be a QuantPolicy or a plain QuantConfig)."""
+    def resolve(name):
+        if hasattr(quant_policy, "resolve"):
+            return quant_policy.resolve(name)
+        return quant_policy
+
+    def walk(node, parts):
+        if not isinstance(node, dict):
+            return node
+        if (set(node) <= {"aw", "ax", "ap"} and "aw" in node and "ax" in node
+                and parts and parts[-1].startswith("qp")):
+            name = _legacy_layer_name(list(parts[:-1])
+                                      + ([parts[-1][3:]]
+                                         if parts[-1].startswith("qp_")
+                                         else []))
+            if name.endswith(_LEGACY_VESTIGIAL_SUFFIXES):
+                return _DROP
+            return QuantState.from_dict(node, spec=resolve(name), name=name)
+        out = {}
+        for k, v in node.items():
+            r = walk(v, parts + (k,))
+            if r is not _DROP:
+                out[k] = r
+        return out
+
+    return walk(tree, ())
+
+
 def _key_to_fname(key: str) -> str:
     return key.replace(_SEP, "__") + ".npy"
 
 
 def save(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
     """Synchronous atomic checkpoint save; returns the final path."""
-    flat = _flatten(tree)
+    quant_meta: dict = {}
+    flat = _flatten(tree, quant_meta=quant_meta)
     tmp = os.path.join(ckpt_dir, f"tmp-{step}")
     final = os.path.join(ckpt_dir, f"step-{step:09d}")
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
-    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    manifest = {"step": step, "extra": extra or {}, "leaves": {},
+                "quant_states": quant_meta}
     for key, val in flat.items():
         arr = np.asarray(val)
         manifest["leaves"][key] = {"shape": list(arr.shape),
@@ -128,11 +288,16 @@ def latest_step(ckpt_dir: str) -> int | None:
 
 
 def restore(ckpt_dir: str, step: int | None = None,
-            shardings=None) -> tuple:
+            shardings=None, quant_policy=None) -> tuple:
     """Load a checkpoint; returns (tree, manifest).
 
     ``shardings``: optional tree (same structure) of NamedSharding/Sharding;
     each leaf is device_put with it — reshard-on-load for elastic restart.
+    ``quant_policy``: back-compat shim for pre-API-v2 checkpoints — a
+    QuantPolicy (or QuantConfig) used to upgrade raw ``{"aw","ax","ap"}``
+    quantizer dicts into typed ``QuantState``s with resolved per-layer
+    specs.  Checkpoints written by API v2 carry their quantizer metadata
+    in the manifest and need no policy.
     """
     if step is None:
         step = latest_step(ckpt_dir)
@@ -152,7 +317,13 @@ def restore(ckpt_dir: str, step: int | None = None,
             arr = arr.view(jnp.dtype(meta["dtype"]))
         sh = flat_shardings.get(key)
         flat[key] = jax.device_put(arr, sh) if sh is not None else arr
-    return _unflatten(flat), manifest
+    tree = _unflatten(flat)
+    quant_meta = manifest.get("quant_states") or {}
+    if quant_meta:
+        tree = _reify_quant_states(tree, quant_meta)
+    elif quant_policy is not None:
+        tree = _upgrade_legacy_quant(tree, quant_policy)
+    return tree, manifest
 
 
 def install_signal_handler(checkpointer: AsyncCheckpointer, get_state):

@@ -34,17 +34,29 @@ def _module(name: str):
     return importlib.import_module(f"repro.configs.{_MODULES[name]}")
 
 
-def get_config(name: str, quant: str = "none", gs: int = 2,
+def get_config(name: str, quant="none", gs: int = 2,
                n_p: int = 8) -> ModelConfig:
-    """Full published config, optionally with the paper's PSUM quantization
-    (``quant`` in {none, w8a8, psq, apsq})."""
+    """Full published config, optionally with the paper's PSUM quantization.
+
+    ``quant`` is a preset string ({none, w8a8, psq, apsq}), an explicit
+    ``QuantConfig``, or a per-layer ``repro.quant.QuantPolicy`` — string
+    presets build the corresponding uniform policy, so every path through
+    here yields policy-resolved per-layer quantizer state.
+    """
     cfg = _module(name).CONFIG
-    if quant == "apsq":
-        cfg = cfg.with_quant(QuantConfig.apsq(gs=gs, n_p=n_p))
-    elif quant == "psq":
-        cfg = cfg.with_quant(QuantConfig.psq(n_p=n_p))
-    elif quant == "w8a8":
-        cfg = cfg.with_quant(QuantConfig.w8a8())
+    if isinstance(quant, str):
+        presets = {
+            "none": None,
+            "apsq": QuantConfig.apsq(gs=gs, n_p=n_p),
+            "psq": QuantConfig.psq(n_p=n_p),
+            "w8a8": QuantConfig.w8a8(),
+        }
+        if quant not in presets:
+            raise KeyError(f"unknown quant preset {quant!r}; "
+                           f"known: {sorted(presets)}")
+        quant = presets[quant]
+    if quant is not None:
+        cfg = cfg.with_quant(quant)
     return cfg.validate()
 
 

@@ -11,6 +11,7 @@ from .quantizers import (
     po2_quantize_codes,
     po2_scale,
     qrange,
+    round_half_up_ste,
     round_ste,
 )
 from .apsq import (
@@ -20,9 +21,13 @@ from .apsq import (
     psq_accumulate,
 )
 from .layers import (
+    DeployedQuantState,
     PsumQuantConfig,
     QuantConfig,
+    QuantState,
+    TapRecord,
     calibrate_dense,
+    deployed_dense,
     effective_n_p,
     quant_dense,
     quant_params_init,
@@ -31,8 +36,10 @@ from .layers import (
 __all__ = [
     "QuantSpec", "floor_ste", "grad_scale", "init_alpha_from",
     "init_log2_alpha_from", "lsq_gradient_scale", "lsq_quantize",
-    "po2_quantize", "po2_quantize_codes", "po2_scale", "qrange", "round_ste",
+    "po2_quantize", "po2_quantize_codes", "po2_scale", "qrange",
+    "round_half_up_ste", "round_ste",
     "apsq_accumulate", "apsq_accumulate_reference", "apsq_matmul",
-    "psq_accumulate", "PsumQuantConfig", "QuantConfig", "calibrate_dense",
+    "psq_accumulate", "DeployedQuantState", "PsumQuantConfig", "QuantConfig",
+    "QuantState", "TapRecord", "calibrate_dense", "deployed_dense",
     "effective_n_p", "quant_dense", "quant_params_init",
 ]

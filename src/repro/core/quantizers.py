@@ -42,6 +42,17 @@ def floor_ste(x: jax.Array) -> jax.Array:
     return x + jax.lax.stop_gradient(jnp.floor(x) - x)
 
 
+def round_half_up_ste(x: jax.Array) -> jax.Array:
+    """Round-half-up (toward +inf) with identity gradient.
+
+    This is the rounding the RAE's shift-based PSUM quantizer implements
+    (``kernels/apsq_matmul/ref.rshift_round``: ``(v + 2^(e-1)) >> e`` ==
+    ``floor(v/2^e + 0.5)``) — the PSUM fake quantizer uses it so QAT and
+    the integer deployment path agree bit-for-bit on the PO2 grid.
+    """
+    return x + jax.lax.stop_gradient(jnp.floor(x + 0.5) - x)
+
+
 def grad_scale(x: jax.Array, scale) -> jax.Array:
     """Forward identity; gradient multiplied by ``scale`` (LSQ trick)."""
     return x * scale + jax.lax.stop_gradient(x * (1.0 - scale))
@@ -97,7 +108,9 @@ def po2_quantize(
     """Fake quantization with a learned power-of-two scale (PSUM quantizer).
 
     Equivalent to ``lsq_quantize`` but the scale is snapped to 2^k so that
-    dequantization is a bit-shift in the RAE / Pallas kernel.
+    dequantization is a bit-shift in the RAE / Pallas kernel, and rounding
+    is half-up to match the hardware shifter exactly (so the QAT forward
+    and the integer deployment path agree bit-for-bit on the PO2 grid).
     """
     qn, qp = qrange(bits, signed)
     if g is None:
@@ -105,7 +118,7 @@ def po2_quantize(
     log2_alpha = grad_scale(log2_alpha, g)
     alpha = po2_scale(log2_alpha)
     clipped = jnp.clip(x / alpha, qn, qp)
-    return round_ste(clipped) * alpha
+    return round_half_up_ste(clipped) * alpha
 
 
 def po2_quantize_codes(x: jax.Array, log2_alpha: jax.Array, bits: int = 8):

@@ -1,0 +1,26 @@
+"""Distribution utilities: logical-axis sharding rules + gradient compression.
+
+``sharding`` maps the logical axis names used by every ``*_specs`` tree in
+``repro.models`` onto concrete mesh axes (with divisibility fallbacks and
+no-axis-reuse), and ``compress`` implements the INT8 cross-pod gradient
+path the trainer uses over the DCN ("pod") axis.
+"""
+from .sharding import (
+    DEFAULT_RULES,
+    batch_spec,
+    optimizer_spec,
+    shard_map,
+    spec_for,
+    tree_specs,
+)
+from .compress import (
+    compress_tree_psum,
+    dequantize_grad,
+    quantize_grad,
+)
+
+__all__ = [
+    "DEFAULT_RULES", "batch_spec", "optimizer_spec", "shard_map",
+    "spec_for", "tree_specs", "compress_tree_psum", "dequantize_grad",
+    "quantize_grad",
+]

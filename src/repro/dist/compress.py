@@ -1,0 +1,50 @@
+"""INT8 gradient compression for the DCN ("pod") axis.
+
+Cross-pod gradient reduction is the one collective that crosses the slow
+data-center network; quantizing each leaf to INT8 with a per-leaf scale
+cuts those bytes 4x.  The trainer composes this inside ``shard_map`` over
+"pod" only — ICI-axis reductions stay in autodiff at full precision.
+Error feedback (caller-held residual) keeps the accumulated quantized sum
+tracking the true sum; see ``tests/test_sharding_roofline.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_grad(g: jax.Array, bits: int = 8):
+    """Per-tensor symmetric INT8 codes + float scale for one gradient."""
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / qmax + 1e-30
+    codes = jnp.clip(jnp.round(g.astype(jnp.float32) / scale),
+                     -qmax - 1, qmax).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_grad(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale
+
+
+def compress_tree_psum(tree, axis_name: str, bits: int = 8):
+    """Quantize every leaf to INT8, then average across ``axis_name``.
+
+    The collective moves the INT8 *codes* (all_gather + local
+    dequantize-mean), not dequantized fp32 — each pod holds its own
+    per-leaf scale, so a direct fp32 psum would forfeit the 4x DCN byte
+    saving this module exists for.  Returns ``(tree, info)`` with the
+    wire bytes of both paths.  Must run inside ``shard_map`` (or any
+    context where ``axis_name`` is bound).
+    """
+    def f(g):
+        codes, scale = quantize_grad(g, bits)
+        all_codes = jax.lax.all_gather(codes, axis_name)    # int8 on wire
+        all_scales = jax.lax.all_gather(scale, axis_name)   # one fp32/pod
+        deq = all_codes.astype(jnp.float32) * all_scales.reshape(
+            (-1,) + (1,) * codes.ndim)
+        return jnp.mean(deq, axis=0)
+
+    out = jax.tree.map(f, tree)
+    n = sum(int(x.size) for x in jax.tree.leaves(tree))
+    info = {"int8_bytes": n, "fp32_bytes": 4 * n}
+    return out, info

@@ -39,24 +39,28 @@ NEG_INF = -1e30
 # ---------------------------------------------------------------------------
 
 def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
-                   head_dim: int, dtype, quant: QuantConfig | None = None,
-                   out_dim: int | None = None) -> Params:
+                   head_dim: int, dtype, quant=None,
+                   out_dim: int | None = None, name: str = "") -> Params:
     kq, kk, kv, ko = jax.random.split(key, 4)
     out_dim = out_dim or d_model
     return {
-        "wq": init_linear(kq, (d_model, n_heads * head_dim), dtype, quant=quant),
-        "wk": init_linear(kk, (d_model, n_kv_heads * head_dim), dtype, quant=quant),
-        "wv": init_linear(kv, (d_model, n_kv_heads * head_dim), dtype, quant=quant),
-        "wo": init_linear(ko, (n_heads * head_dim, out_dim), dtype, quant=quant),
+        "wq": init_linear(kq, (d_model, n_heads * head_dim), dtype,
+                          quant=quant, name=f"{name}.wq"),
+        "wk": init_linear(kk, (d_model, n_kv_heads * head_dim), dtype,
+                          quant=quant, name=f"{name}.wk"),
+        "wv": init_linear(kv, (d_model, n_kv_heads * head_dim), dtype,
+                          quant=quant, name=f"{name}.wv"),
+        "wo": init_linear(ko, (n_heads * head_dim, out_dim), dtype,
+                          quant=quant, name=f"{name}.wo"),
     }
 
 
-def attention_specs(quant: QuantConfig | None = None) -> Params:
+def attention_specs(quant=None, name: str = "") -> Params:
     return {
-        "wq": linear_specs(("embed", "qheads"), quant),
-        "wk": linear_specs(("embed", "kvheads"), quant),
-        "wv": linear_specs(("embed", "kvheads"), quant),
-        "wo": linear_specs(("qheads", "embed"), quant),
+        "wq": linear_specs(("embed", "qheads"), quant, f"{name}.wq"),
+        "wk": linear_specs(("embed", "kvheads"), quant, f"{name}.wk"),
+        "wv": linear_specs(("embed", "kvheads"), quant, f"{name}.wv"),
+        "wo": linear_specs(("qheads", "embed"), quant, f"{name}.wo"),
     }
 
 
@@ -299,12 +303,13 @@ def attention_block(
     causal: bool = True,
     window: int | None = None,
     softcap: float | None = None,
-    quant: QuantConfig | None = None,
+    quant=None,
     cache: Params | None = None,
     pos: jax.Array | int = 0,
     xkv: jax.Array | None = None,
     use_rope: bool = True,
     mesh=None,
+    tap: list | None = None,
 ):
     """Projections + RoPE + attention.  Two modes:
 
@@ -317,10 +322,12 @@ def attention_block(
     non-causal, no rope on kv by default (encoder output is position-free).
     """
     B, S, _ = x.shape
-    q = dense(p["wq"], x, quant).reshape(B, S, n_heads, head_dim)
+    q = dense(p["wq"], x, quant, tap=tap).reshape(B, S, n_heads, head_dim)
     src = xkv if xkv is not None else x
-    k = dense(p["wk"], src, quant).reshape(B, src.shape[1], n_kv_heads, head_dim)
-    v = dense(p["wv"], src, quant).reshape(B, src.shape[1], n_kv_heads, head_dim)
+    k = dense(p["wk"], src, quant, tap=tap).reshape(
+        B, src.shape[1], n_kv_heads, head_dim)
+    v = dense(p["wv"], src, quant, tap=tap).reshape(
+        B, src.shape[1], n_kv_heads, head_dim)
     # Keep attention compute sharded over heads (TP) — without these
     # constraints GSPMD can lose the head sharding through the reshape +
     # rope chain and replicate the whole S^2 score computation per shard.
@@ -350,5 +357,6 @@ def attention_block(
                                        softcap=softcap)
         new_cache = {"k": k, "v": v}
 
-    out = dense(p["wo"], out.reshape(B, S, n_heads * head_dim), quant)
+    out = dense(p["wo"], out.reshape(B, S, n_heads * head_dim), quant,
+                tap=tap)
     return out, new_cache

@@ -17,7 +17,15 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import QuantConfig, quant_dense, quant_params_init
+from repro.core import (
+    DeployedQuantState,
+    QuantConfig,
+    QuantState,
+    deployed_dense,
+    quant_dense,
+    quant_params_init,
+)
+from repro.quant.policy import resolve_quant
 
 Params = dict
 P = jax.sharding.PartitionSpec
@@ -28,43 +36,56 @@ P = jax.sharding.PartitionSpec
 # ---------------------------------------------------------------------------
 
 def init_linear(key, shape, dtype, scale: float | None = None,
-                quant: QuantConfig | None = None) -> Params:
+                quant=None, name: str = "") -> Params:
     """Linear weight with fan-in init; optional quantizer state.
 
     ``shape`` is (K, *out_dims): the first axis is the reduction dim.
+    ``quant`` is a ``QuantConfig`` or a per-layer ``QuantPolicy`` resolved
+    against ``name`` (the layer's stable name, stored in the state).
     """
     fan_in = shape[0]
     scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
     w = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
     p = {"w": w}
-    if quant is not None and quant.enabled:
-        p["qp"] = quant_params_init(w.reshape(shape[0], -1).astype(jnp.float32),
-                                    quant)
+    resolved = resolve_quant(quant, name)
+    if resolved is not None:
+        p["qp"] = quant_params_init(
+            w.reshape(shape[0], -1).astype(jnp.float32), resolved, name=name)
     return p
 
 
-def linear_specs(logical: tuple, quant: QuantConfig | None = None) -> Params:
+def linear_specs(logical: tuple, quant=None, name: str = "") -> Params:
     """Logical-axis names matching ``init_linear``'s tree."""
     s = {"w": logical}
-    if quant is not None and quant.enabled:
-        s["qp"] = {"aw": (logical[-1],) if False else (None,),
-                   "ax": (), "ap": (None,)}
+    if resolve_quant(quant, name) is not None:
         # per-channel aw is 1-D over flattened out dims -> replicated
-        s["qp"]["aw"] = (None,)
+        s["qp"] = {"aw": (None,), "ax": (), "ap": (None,)}
     return s
 
 
-def dense(p: Params, x: jax.Array, quant: QuantConfig | None) -> jax.Array:
-    """x[..., K] @ w[K, *out] with optional W8A8/APSQ fake quant."""
+def dense(p: Params, x: jax.Array, quant=None, *,
+          tap: list | None = None) -> jax.Array:
+    """x[..., K] @ w[K, *out] with optional W8A8/APSQ fake quant.
+
+    Dispatch is driven by the param subtree: a ``QuantState`` quantizes
+    with its own resolved spec, a ``DeployedQuantState`` runs the integer
+    deployment path, a legacy ``{"aw","ax","ap"}`` dict uses the global
+    ``quant`` config, and no ``qp`` at all is a plain float GEMM.
+    ``tap`` threads the calibration capture list down to ``quant_dense``.
+    """
+    qp = p.get("qp")
+    if isinstance(qp, DeployedQuantState):
+        return deployed_dense(x, qp)
     w = p["w"]
-    if quant is None or not quant.enabled or "qp" not in p:
+    if qp is None or (not isinstance(qp, QuantState)
+                      and (quant is None or not quant.enabled)):
         y = jax.lax.dot_general(
             x, w.reshape(w.shape[0], -1).astype(x.dtype),
             (((x.ndim - 1,), (0,)), ((), ())),
         )
         return y.reshape(x.shape[:-1] + w.shape[1:])
     w2d = w.reshape(w.shape[0], -1)
-    y = quant_dense(x, w2d, p["qp"], quant)
+    y = quant_dense(x, w2d, qp, quant, tap=tap)
     return y.reshape(x.shape[:-1] + w.shape[1:])
 
 
@@ -149,35 +170,41 @@ def apply_rope(x: jax.Array, positions: jax.Array, *, fraction: float = 1.0,
 # ---------------------------------------------------------------------------
 
 def init_mlp(key, d_model: int, d_ff: int, dtype, kind: str = "swiglu",
-             quant: QuantConfig | None = None) -> Params:
+             quant=None, name: str = "") -> Params:
     k1, k2, k3 = jax.random.split(key, 3)
     if kind == "swiglu":
         return {
-            "wi": init_linear(k1, (d_model, d_ff), dtype, quant=quant),
-            "wg": init_linear(k2, (d_model, d_ff), dtype, quant=quant),
-            "wo": init_linear(k3, (d_ff, d_model), dtype, quant=quant),
+            "wi": init_linear(k1, (d_model, d_ff), dtype, quant=quant,
+                              name=f"{name}.wi"),
+            "wg": init_linear(k2, (d_model, d_ff), dtype, quant=quant,
+                              name=f"{name}.wg"),
+            "wo": init_linear(k3, (d_ff, d_model), dtype, quant=quant,
+                              name=f"{name}.wo"),
         }
     return {  # gelu MLP (BERT / StarCoder2 style)
-        "wi": init_linear(k1, (d_model, d_ff), dtype, quant=quant),
-        "wo": init_linear(k3, (d_ff, d_model), dtype, quant=quant),
+        "wi": init_linear(k1, (d_model, d_ff), dtype, quant=quant,
+                          name=f"{name}.wi"),
+        "wo": init_linear(k3, (d_ff, d_model), dtype, quant=quant,
+                          name=f"{name}.wo"),
     }
 
 
-def mlp_specs(kind: str = "swiglu", quant: QuantConfig | None = None) -> Params:
-    s = {"wi": linear_specs(("embed", "ff"), quant),
-         "wo": linear_specs(("ff", "embed"), quant)}
+def mlp_specs(kind: str = "swiglu", quant=None, name: str = "") -> Params:
+    s = {"wi": linear_specs(("embed", "ff"), quant, f"{name}.wi"),
+         "wo": linear_specs(("ff", "embed"), quant, f"{name}.wo")}
     if kind == "swiglu":
-        s["wg"] = linear_specs(("embed", "ff"), quant)
+        s["wg"] = linear_specs(("embed", "ff"), quant, f"{name}.wg")
     return s
 
 
 def apply_mlp(p: Params, x: jax.Array, kind: str = "swiglu",
-              quant: QuantConfig | None = None) -> jax.Array:
+              quant=None, tap: list | None = None) -> jax.Array:
     if kind == "swiglu":
-        h = jax.nn.silu(dense(p["wg"], x, quant)) * dense(p["wi"], x, quant)
+        h = (jax.nn.silu(dense(p["wg"], x, quant, tap=tap))
+             * dense(p["wi"], x, quant, tap=tap))
     else:
-        h = jax.nn.gelu(dense(p["wi"], x, quant))
-    return dense(p["wo"], h, quant)
+        h = jax.nn.gelu(dense(p["wi"], x, quant, tap=tap))
+    return dense(p["wo"], h, quant, tap=tap)
 
 
 # ---------------------------------------------------------------------------

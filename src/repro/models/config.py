@@ -53,6 +53,9 @@ class ModelConfig:
     tie_embeddings: bool = False
     dtype: str = "bfloat16"
     quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    # per-layer policy (repro.quant.policy.QuantPolicy); when set it takes
+    # precedence over the global ``quant`` config at init time
+    quant_policy: object | None = None
     remat: bool = True
     remat_policy: str = "none"        # none | dots  ("none" = save nothing)
     scan_layers: bool = True          # False: python-unrolled units (QAT
@@ -88,8 +91,25 @@ class ModelConfig:
         """True if no full-attention layer exists (long_500k eligibility)."""
         return all(k in ("rwkv", "rglru", "local") for k in self.block_pattern)
 
-    def with_quant(self, quant: QuantConfig) -> "ModelConfig":
-        return dataclasses.replace(self, quant=quant)
+    @property
+    def policy(self):
+        """The per-layer quantization policy driving param init.
+
+        ``quant_policy`` when set; otherwise the global ``quant`` config
+        as the trivial uniform policy; None when quantization is off.
+        """
+        if self.quant_policy is not None:
+            return self.quant_policy
+        if self.quant.enabled:
+            from repro.quant.policy import QuantPolicy
+            return QuantPolicy.uniform(self.quant)
+        return None
+
+    def with_quant(self, quant) -> "ModelConfig":
+        """Set a global ``QuantConfig`` or a per-layer ``QuantPolicy``."""
+        if isinstance(quant, QuantConfig):
+            return dataclasses.replace(self, quant=quant, quant_policy=None)
+        return dataclasses.replace(self, quant_policy=quant)
 
     def scaled(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

@@ -75,64 +75,67 @@ def tmap(f, *trees):
 # One layer (time mix + channel mix, pre-norm residual)
 # ---------------------------------------------------------------------------
 
-def _init_ffn(key, cfg: ModelConfig, quant):
+def _init_ffn(key, cfg: ModelConfig, quant, name: str = ""):
     if cfg.mlp == "moe":
         return init_moe(key, cfg.d_model, cfg.d_ff, cfg.n_experts,
-                        cfg.top_k, cfg.jdtype, quant=quant)
+                        cfg.top_k, cfg.jdtype, quant=quant, name=name)
     if cfg.mlp == "rwkv_cm":
         return init_rwkv_channel_mix(key, cfg.d_model, cfg.d_ff, cfg.jdtype,
-                                     quant=quant)
+                                     quant=quant, name=name)
     return init_mlp(key, cfg.d_model, cfg.d_ff, cfg.jdtype, kind=cfg.mlp,
-                    quant=quant)
+                    quant=quant, name=name)
 
 
-def _ffn_specs(cfg: ModelConfig, quant):
+def _ffn_specs(cfg: ModelConfig, quant, name: str = ""):
     if cfg.mlp == "moe":
-        return moe_specs(quant)
+        return moe_specs(quant, name)
     if cfg.mlp == "rwkv_cm":
-        return rwkv_channel_mix_specs(quant)
-    return mlp_specs(cfg.mlp, quant)
+        return rwkv_channel_mix_specs(quant, name)
+    return mlp_specs(cfg.mlp, quant, name)
 
 
-def init_layer(key, cfg: ModelConfig, kind: str, cross: bool = False) -> Params:
+def init_layer(key, cfg: ModelConfig, kind: str, cross: bool = False,
+               name: str = "unit.0") -> Params:
     k1, k2, k3, k4 = jax.random.split(key, 4)
-    quant = cfg.quant if cfg.quant.enabled else None
+    quant = cfg.policy
     p: Params = {"ln1": init_norm(cfg.d_model, cfg.jdtype, cfg.norm),
                  "ln2": init_norm(cfg.d_model, cfg.jdtype, cfg.norm)}
     if kind in ("attn", "local"):
         p["mix"] = init_attention(k1, cfg.d_model, cfg.n_heads,
                                   cfg.n_kv_heads, cfg.hd, cfg.jdtype,
-                                  quant=quant)
+                                  quant=quant, name=f"{name}.mix")
     elif kind == "rwkv":
         p["mix"] = init_rwkv_time_mix(k1, cfg.d_model, cfg.n_heads, cfg.hd,
-                                      cfg.jdtype, quant=quant)
+                                      cfg.jdtype, quant=quant,
+                                      name=f"{name}.mix")
     elif kind == "rglru":
         p["mix"] = init_rglru_block(k1, cfg.d_model, cfg.d_rnn, cfg.jdtype,
-                                    quant=quant)
+                                    quant=quant, name=f"{name}.mix")
     else:
         raise ValueError(kind)
-    p["ffn"] = _init_ffn(k2, cfg, quant)
+    p["ffn"] = _init_ffn(k2, cfg, quant, name=f"{name}.ffn")
     if cross:
         p["lnx"] = init_norm(cfg.d_model, cfg.jdtype, cfg.norm)
         p["xattn"] = init_attention(k3, cfg.d_model, cfg.n_heads,
                                     cfg.n_kv_heads, cfg.hd, cfg.jdtype,
-                                    quant=quant)
+                                    quant=quant, name=f"{name}.xattn")
     return p
 
 
-def layer_specs(cfg: ModelConfig, kind: str, cross: bool = False) -> Params:
-    quant = cfg.quant if cfg.quant.enabled else None
+def layer_specs(cfg: ModelConfig, kind: str, cross: bool = False,
+                name: str = "unit.0") -> Params:
+    quant = cfg.policy
     s: Params = {"ln1": norm_specs(cfg.norm), "ln2": norm_specs(cfg.norm)}
     if kind in ("attn", "local"):
-        s["mix"] = attention_specs(quant)
+        s["mix"] = attention_specs(quant, f"{name}.mix")
     elif kind == "rwkv":
-        s["mix"] = rwkv_time_mix_specs(quant)
+        s["mix"] = rwkv_time_mix_specs(quant, f"{name}.mix")
     elif kind == "rglru":
-        s["mix"] = rglru_block_specs(quant)
-    s["ffn"] = _ffn_specs(cfg, quant)
+        s["mix"] = rglru_block_specs(quant, f"{name}.mix")
+    s["ffn"] = _ffn_specs(cfg, quant, name=f"{name}.ffn")
     if cross:
         s["lnx"] = norm_specs(cfg.norm)
-        s["xattn"] = attention_specs(quant)
+        s["xattn"] = attention_specs(quant, f"{name}.xattn")
     return s
 
 
@@ -167,10 +170,13 @@ def apply_layer(
     pos: jax.Array | int = 0,
     enc_out: jax.Array | None = None,
     causal: bool = True,
+    tap: list | None = None,
 ):
     """One pre-norm block.  ``state`` not None => decode (single token).
 
     Returns (x, new_state); new_state is None when training without cache.
+    ``tap`` is the calibration capture list, threaded down to every
+    quantized linear (``repro.core.TapRecord`` per eager invocation).
     """
     # (§Perf it4, refuted: an explicit seq-shard constraint on the
     # residual stream added reshards — GSPMD already propagates SP from
@@ -188,18 +194,18 @@ def apply_layer(
             head_dim=cfg.hd, rope_fraction=cfg.rope_fraction,
             rope_theta=cfg.rope_theta, causal=causal, window=window,
             softcap=cfg.softcap, quant=quant, cache=cache, pos=pos,
-            mesh=mesh)
+            mesh=mesh, tap=tap)
         new_state = kv
     elif kind == "rwkv":
         out, tm_state = rwkv_time_mix(
             p["mix"], h, n_heads=cfg.n_heads, head_dim=cfg.hd, quant=quant,
             impl=cfg.wkv_impl, wkv_chunk=cfg.wkv_chunk, mesh=mesh,
-            state=state["tm"] if state is not None else None)
+            state=state["tm"] if state is not None else None, tap=tap)
         new_state = {"tm": tm_state}
     elif kind == "rglru":
         out, rec_state = rglru_block(
             p["mix"], h, quant=quant, mesh=mesh,
-            state=state["rec"] if state is not None else None)
+            state=state["rec"] if state is not None else None, tap=tap)
         new_state = {"rec": rec_state}
     else:
         raise ValueError(kind)
@@ -210,7 +216,7 @@ def apply_layer(
         outx, _ = attention_block(
             p["xattn"], hx, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.hd, quant=quant, xkv=enc_out, use_rope=False,
-            mesh=mesh)
+            mesh=mesh, tap=tap)
         x = x + outx
 
     h2 = apply_norm(p["ln2"], x, cfg.norm)
@@ -223,16 +229,16 @@ def apply_layer(
         else:
             y = moe_ffn(p["ffn"], h2, n_experts=cfg.n_experts,
                         top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
-                        quant=quant)
+                        quant=quant, tap=tap)
     elif cfg.mlp == "rwkv_cm":
         y, cm_state = rwkv_channel_mix(
             p["ffn"], h2, quant=quant, mesh=mesh,
             state=state["cm"] if (state is not None and "cm" in state)
-            else None)
+            else None, tap=tap)
         if state is not None:
             new_state["cm"] = cm_state
     else:
-        y = apply_mlp(p["ffn"], h2, kind=cfg.mlp, quant=quant)
+        y = apply_mlp(p["ffn"], h2, kind=cfg.mlp, quant=quant, tap=tap)
     x = x + y
     # RWKV layers always carry channel-mix shift state in decode.
     if kind == "rwkv" and state is not None and "cm" not in new_state:
@@ -244,14 +250,16 @@ def apply_layer(
 # Units (one repeat of block_pattern) — scan-over-units with stacked params
 # ---------------------------------------------------------------------------
 
-def init_unit(key, cfg: ModelConfig, cross: bool = False) -> Params:
+def init_unit(key, cfg: ModelConfig, cross: bool = False,
+              name: str = "unit") -> Params:
     keys = jax.random.split(key, len(cfg.block_pattern))
-    return {str(i): init_layer(k, cfg, kind, cross=cross)
+    return {str(i): init_layer(k, cfg, kind, cross=cross, name=f"{name}.{i}")
             for i, (k, kind) in enumerate(zip(keys, cfg.block_pattern))}
 
 
-def unit_specs(cfg: ModelConfig, cross: bool = False) -> Params:
-    return {str(i): layer_specs(cfg, kind, cross=cross)
+def unit_specs(cfg: ModelConfig, cross: bool = False,
+               name: str = "unit") -> Params:
+    return {str(i): layer_specs(cfg, kind, cross=cross, name=f"{name}.{i}")
             for i, kind in enumerate(cfg.block_pattern)}
 
 
@@ -261,13 +269,13 @@ def init_unit_state(cfg: ModelConfig, batch: int, cache_len: int) -> Params:
 
 
 def apply_unit(p: Params, x, *, cfg: ModelConfig, mesh=None, state=None,
-               pos=0, enc_out=None, causal=True):
+               pos=0, enc_out=None, causal=True, tap: list | None = None):
     new_state = {}
     for i, kind in enumerate(cfg.block_pattern):
         x, s = apply_layer(
             p[str(i)], x, cfg=cfg, kind=kind, mesh=mesh,
             state=state[str(i)] if state is not None else None,
-            pos=pos, enc_out=enc_out, causal=causal)
+            pos=pos, enc_out=enc_out, causal=causal, tap=tap)
         new_state[str(i)] = s
     return x, new_state
 
@@ -298,14 +306,14 @@ def init_lm(key, cfg: ModelConfig) -> Params:
     if cfg.scan_layers:
         p["units"] = _stack_init(ks[1], cfg.n_units,
                                  lambda k: init_unit(k, cfg, cross=cross))
-    else:  # unstacked: calibration taps see the real param objects
+    else:  # unstacked: python-unrolled units (tiny models, eager passes)
         uk = jax.random.split(ks[1], max(cfg.n_units, 1))
         p["units"] = {f"u{i}": init_unit(uk[i], cfg, cross=cross)
                       for i in range(cfg.n_units)}
     if cfg.n_rem:
         rk = jax.random.split(ks[2], cfg.n_rem)
         p["rem"] = {str(i): init_layer(rk[i], cfg, cfg.block_pattern[i],
-                                       cross=cross)
+                                       cross=cross, name=f"rem.{i}")
                     for i in range(cfg.n_rem)}
     p["final_norm"] = init_norm(cfg.d_model, cfg.jdtype, cfg.norm)
     if not cfg.tie_embeddings:
@@ -315,7 +323,7 @@ def init_lm(key, cfg: ModelConfig) -> Params:
         p["encoder"] = {
             "units": _stack_init(
                 ks[4], cfg.n_enc_layers // len(cfg.block_pattern),
-                lambda k: init_unit(k, enc_cfg)),
+                lambda k: init_unit(k, enc_cfg, name="encoder.unit")),
             "final_norm": init_norm(cfg.d_model, cfg.jdtype, cfg.norm),
         }
     if cfg.frontend == "vision":
@@ -335,13 +343,14 @@ def lm_specs(cfg: ModelConfig) -> Params:
                       for i in range(cfg.n_units)}
     if cfg.n_rem:
         s["rem"] = {str(i): layer_specs(cfg, cfg.block_pattern[i],
-                                        cross=cross)
+                                        cross=cross, name=f"rem.{i}")
                     for i in range(cfg.n_rem)}
     s["final_norm"] = norm_specs(cfg.norm)
     if not cfg.tie_embeddings:
         s["head"] = linear_specs(("embed", "vocab"))
     if cfg.encdec:
-        s["encoder"] = {"units": stack_specs(unit_specs(cfg)),
+        s["encoder"] = {"units": stack_specs(unit_specs(
+                            cfg, name="encoder.unit")),
                         "final_norm": norm_specs(cfg.norm)}
     if cfg.frontend == "vision":
         s["frontend_proj"] = linear_specs(("embed", "embed_out"))
@@ -358,16 +367,20 @@ def _remat(fn, cfg: ModelConfig):
 
 
 def _scan_units(params_units, x, *, cfg: ModelConfig, mesh, pos, enc_out,
-                causal):
+                causal, tap: list | None = None):
     if params_units is None:
         return x
 
-    if not cfg.scan_layers:  # unstacked dict (calibration / tiny models)
+    if not cfg.scan_layers:  # unstacked dict (tiny models, eager passes)
         for i in range(len(params_units)):
             x, _ = apply_unit(params_units[f"u{i}"], x, cfg=cfg, mesh=mesh,
-                              pos=pos, enc_out=enc_out, causal=causal)
+                              pos=pos, enc_out=enc_out, causal=causal,
+                              tap=tap)
         return x
 
+    # The scan body traces, so the capture tap cannot see its linears —
+    # ``repro.quant.calibrate_model`` slices the stacked params and runs
+    # per-unit eager passes instead.
     def body(carry, unit_p):
         y, _ = apply_unit(unit_p, carry, cfg=cfg, mesh=mesh, pos=pos,
                           enc_out=enc_out, causal=causal)
@@ -426,11 +439,15 @@ def forward(
     enc_embeds: jax.Array | None = None,
     mesh=None,
     pos: jax.Array | int = 0,
+    tap: list | None = None,
 ) -> jax.Array:
     """Training / one-shot prefill forward; returns logits [B, S_out, V].
 
     ``embeds``     — vision patch embeddings (prepended to tokens).
     ``enc_embeds`` — audio frame embeddings for the encoder (encdec only).
+    ``tap``        — calibration capture list (reaches every linear only
+    when ``cfg.scan_layers`` is False; ``calibrate_model`` handles the
+    scanned case by per-unit eager passes).
     """
     enc_out = None
     if cfg.encdec:
@@ -438,11 +455,11 @@ def forward(
         enc_out = encode(p, cfg, enc_embeds, mesh=mesh)
     x = embed_inputs(p, cfg, tokens, embeds)
     x = _scan_units(p["units"], x, cfg=cfg, mesh=mesh, pos=pos,
-                    enc_out=enc_out, causal=True)
+                    enc_out=enc_out, causal=True, tap=tap)
     for i in range(cfg.n_rem):
         x, _ = apply_layer(p["rem"][str(i)], x, cfg=cfg,
                            kind=cfg.block_pattern[i], mesh=mesh, pos=pos,
-                           enc_out=enc_out)
+                           enc_out=enc_out, tap=tap)
     return logits_from_hidden(p, cfg, x, mesh)
 
 

@@ -29,12 +29,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import QuantConfig, quant_dense
+from repro.core import QuantConfig, QuantState, TapRecord, quant_dense
+from repro.quant.policy import resolve_quant
 from .common import Params, dense, init_linear, linear_specs
 
 
 def init_moe(key, d_model: int, d_ff: int, n_experts: int, top_k: int,
-             dtype, quant: QuantConfig | None = None) -> Params:
+             dtype, quant=None, name: str = "") -> Params:
     kr, k1, k2, k3 = jax.random.split(key, 4)
     s = 1.0 / math.sqrt(d_model)
     sf = 1.0 / math.sqrt(d_ff)
@@ -47,45 +48,63 @@ def init_moe(key, d_model: int, d_ff: int, n_experts: int, top_k: int,
         "wo": (jax.random.normal(k3, (n_experts, d_ff, d_model), jnp.float32)
                * sf).astype(dtype),
     }
-    if quant is not None and quant.enabled:
-        # One quantizer state per expert weight tensor (shared across E for
-        # scale simplicity; per-expert aw columns broadcast fine).
-        from repro.core import quant_params_init
-        p["qp_wi"] = quant_params_init(p["wi"][0].astype(jnp.float32), quant)
-        p["qp_wg"] = quant_params_init(p["wg"][0].astype(jnp.float32), quant)
-        p["qp_wo"] = quant_params_init(p["wo"][0].astype(jnp.float32), quant)
+    for wname in ("wi", "wg", "wo"):
+        resolved = resolve_quant(quant, f"{name}.{wname}")
+        if resolved is not None:
+            # One quantizer state per expert weight tensor (shared across E
+            # for scale simplicity; per-expert aw columns broadcast fine).
+            from repro.core import quant_params_init
+            p[f"qp_{wname}"] = quant_params_init(
+                p[wname][0].astype(jnp.float32), resolved,
+                name=f"{name}.{wname}")
     return p
 
 
-def moe_specs(quant=None) -> Params:
+def moe_specs(quant=None, name: str = "") -> Params:
     s = {
         "router": linear_specs(("embed", None)),
         "wi": ("expert", "embed", "ff_unsharded"),
         "wg": ("expert", "embed", "ff_unsharded"),
         "wo": ("expert", "ff_unsharded", "embed"),
     }
-    if quant is not None and quant.enabled:
-        qspec = {"aw": (None,), "ax": (), "ap": (None,)}
-        s["qp_wi"] = dict(qspec)
-        s["qp_wg"] = dict(qspec)
-        s["qp_wo"] = dict(qspec)
+    for wname in ("wi", "wg", "wo"):
+        if resolve_quant(quant, f"{name}.{wname}") is not None:
+            s[f"qp_{wname}"] = {"aw": (None,), "ax": (), "ap": (None,)}
     return s
 
 
 def _expert_gemm(x, w, qp, quant):
     """x: [E, C, K] @ w: [E, K, N] -> [E, C, N], optionally quantized."""
-    if quant is None or not quant.enabled or qp is None:
+    if qp is None or (not isinstance(qp, QuantState)
+                      and (quant is None or not quant.enabled)):
         return jnp.einsum("eck,ekn->ecn", x, w.astype(x.dtype))
     f = lambda xe, we: quant_dense(xe, we.astype(jnp.float32), qp, quant)
     return jax.vmap(f)(x.astype(jnp.float32), w.astype(jnp.float32)
                        ).astype(x.dtype)
 
 
+def _moe_tap(tap, qp, x2d, w):
+    """Capture one expert GEMM for calibration (the vmapped expert loop
+    always traces, so dense-level capture cannot see these linears).
+
+    Capacity-padded dispatch slots are all-zero rows; they are masked out
+    at combine time and must not bias the activation scale low, so only
+    occupied rows are captured (eager-only, dynamic shapes are fine)."""
+    if (tap is not None and isinstance(qp, QuantState)
+            and not isinstance(x2d, jax.core.Tracer)):
+        live = x2d[jnp.any(x2d != 0, axis=-1)]
+        if live.shape[0] == 0:
+            return
+        tap.append(TapRecord(qp.name, live, w[0].astype(jnp.float32)
+                             .reshape(w.shape[1], -1), qp))
+
+
 def moe_ffn(p: Params, x: jax.Array, *, n_experts: int, top_k: int,
             capacity_factor: float = 1.25,
-            quant: QuantConfig | None = None,
+            quant=None,
             expert_offset: int = 0, n_local_experts: int | None = None,
-            axis_name: str | None = None) -> jax.Array:
+            axis_name: str | None = None,
+            tap: list | None = None) -> jax.Array:
     """Top-k MoE FFN over local experts [expert_offset, +n_local).
 
     x: [B, S, d].  When ``axis_name`` is given the result is psum'd over
@@ -125,9 +144,13 @@ def moe_ffn(p: Params, x: jax.Array, *, n_experts: int, top_k: int,
     h = buf[:-1].reshape(E_loc, cap, d)
 
     # --- expert computation (swiglu) ---
+    _moe_tap(tap, p.get("qp_wg"), h.reshape(-1, d), p["wg"])
+    _moe_tap(tap, p.get("qp_wi"), h.reshape(-1, d), p["wi"])
     a = _expert_gemm(h, p["wg"], p.get("qp_wg"), quant)
     b = _expert_gemm(h, p["wi"], p.get("qp_wi"), quant)
     hidden = jax.nn.silu(a) * b
+    _moe_tap(tap, p.get("qp_wo"), hidden.reshape(-1, hidden.shape[-1]),
+             p["wo"])
     y_exp = _expert_gemm(hidden, p["wo"], p.get("qp_wo"), quant)
 
     # --- combine back to tokens ---
@@ -176,11 +199,11 @@ def moe_ffn_sharded(p: Params, x: jax.Array, *, mesh, n_experts: int,
                        expert_offset=idx * e_loc, n_local_experts=e_loc,
                        axis_name=model_axis)
 
-    f = jax.shard_map(
+    from repro.dist import shard_map
+    f = shard_map(
         local_fn, mesh=mesh,
         in_specs=in_specs,
         out_specs=P(data_axes, None, None),
-        check_vma=False,
     )
     experts = {k: v for k, v in p.items() if k != "router"}
     return f(p["router"], experts, x)

@@ -27,14 +27,16 @@ CONV_WIDTH = 4
 
 
 def init_rglru_block(key, d_model: int, d_rnn: int, dtype,
-                     quant: QuantConfig | None = None) -> Params:
+                     quant=None, name: str = "") -> Params:
     ks = jax.random.split(key, 6)
     # Lambda init so decay a in [0.9, 0.999] at r = 1 (Griffin appendix).
     u = jax.random.uniform(ks[0], (d_rnn,), jnp.float32, 0.9, 0.999)
     lam = jnp.log(jnp.expm1(-jnp.log(u) / RGLRU_C))  # inv-softplus
     return {
-        "wx": init_linear(ks[1], (d_model, d_rnn), dtype, quant=quant),
-        "wy": init_linear(ks[2], (d_model, d_rnn), dtype, quant=quant),
+        "wx": init_linear(ks[1], (d_model, d_rnn), dtype, quant=quant,
+                          name=f"{name}.wx"),
+        "wy": init_linear(ks[2], (d_model, d_rnn), dtype, quant=quant,
+                          name=f"{name}.wy"),
         "conv_w": (jax.random.normal(ks[3], (CONV_WIDTH, d_rnn), jnp.float32)
                    * 0.1).astype(dtype),
         "conv_b": jnp.zeros((d_rnn,), dtype),
@@ -44,14 +46,14 @@ def init_rglru_block(key, d_model: int, d_rnn: int, dtype,
         "gate_x_b": jnp.zeros((d_rnn,), jnp.float32),
         "lam": lam,
         "wo": init_linear(jax.random.fold_in(key, 7), (d_rnn, d_model), dtype,
-                          quant=quant),
+                          quant=quant, name=f"{name}.wo"),
     }
 
 
-def rglru_block_specs(quant=None) -> Params:
+def rglru_block_specs(quant=None, name: str = "") -> Params:
     return {
-        "wx": linear_specs(("embed", "rnn"), quant),
-        "wy": linear_specs(("embed", "rnn"), quant),
+        "wx": linear_specs(("embed", "rnn"), quant, f"{name}.wx"),
+        "wy": linear_specs(("embed", "rnn"), quant, f"{name}.wy"),
         "conv_w": (None, "rnn"),
         "conv_b": ("rnn",),
         "gate_a": linear_specs(("rnn", "rnn_out")),
@@ -59,7 +61,7 @@ def rglru_block_specs(quant=None) -> Params:
         "gate_a_b": ("rnn",),
         "gate_x_b": ("rnn",),
         "lam": ("rnn",),
-        "wo": linear_specs(("rnn", "embed"), quant),
+        "wo": linear_specs(("rnn", "embed"), quant, f"{name}.wo"),
     }
 
 
@@ -93,8 +95,9 @@ def _rglru_scan(x: jax.Array, a: jax.Array, h0: jax.Array):
 
 
 def rglru_block(p: Params, x: jax.Array, *,
-                quant: QuantConfig | None = None,
-                state: Params | None = None, mesh=None):
+                quant=None,
+                state: Params | None = None, mesh=None,
+                tap: list | None = None):
     """Full recurrent block.  state = {"h": [B, d_rnn] fp32,
     "conv": [B, 3, d_rnn]} or None (fresh)."""
     from .common import act_spec, act_spec_seq, shard_hint
@@ -109,9 +112,9 @@ def rglru_block(p: Params, x: jax.Array, *,
         rnn_spec = act_spec_seq(mesh, B, S)
     else:
         rnn_spec = act_spec(mesh, B, feat=d_rnn)
-    y = jax.nn.gelu(dense(p["wy"], x, quant))
+    y = jax.nn.gelu(dense(p["wy"], x, quant, tap=tap))
     y = shard_hint(y, rnn_spec)
-    xr = dense(p["wx"], x, quant)
+    xr = dense(p["wx"], x, quant, tap=tap)
     conv_state = state["conv"] if state is not None else None
     xr, new_conv = _causal_conv1d(xr, p["conv_w"], p["conv_b"], conv_state)
     # Keep the whole recurrence sharded on the (diagonal) channel dim —
@@ -137,7 +140,7 @@ def rglru_block(p: Params, x: jax.Array, *,
     else:
         h = _rglru_scan(gated, a, h0)
 
-    out = dense(p["wo"], (h.astype(x.dtype) * y), quant)
+    out = dense(p["wo"], (h.astype(x.dtype) * y), quant, tap=tap)
     new_state = {"h": h[:, -1], "conv": new_conv}
     return out, new_state
 

@@ -34,7 +34,7 @@ DECAY_LORA_R = 64  # decay LoRA rank
 
 
 def init_rwkv_time_mix(key, d_model: int, n_heads: int, head_dim: int, dtype,
-                       quant: QuantConfig | None = None) -> Params:
+                       quant=None, name: str = "") -> Params:
     ks = jax.random.split(key, 12)
     d_attn = n_heads * head_dim
     return {
@@ -44,11 +44,16 @@ def init_rwkv_time_mix(key, d_model: int, n_heads: int, head_dim: int, dtype,
         "mix_w2": (jax.random.normal(ks[1], (5, LORA_R, d_model), jnp.float32)
                    * 0.01).astype(dtype),
         # projections
-        "wr": init_linear(ks[2], (d_model, d_attn), dtype, quant=quant),
-        "wk": init_linear(ks[3], (d_model, d_attn), dtype, quant=quant),
-        "wv": init_linear(ks[4], (d_model, d_attn), dtype, quant=quant),
-        "wg": init_linear(ks[5], (d_model, d_attn), dtype, quant=quant),
-        "wo": init_linear(ks[6], (d_attn, d_model), dtype, quant=quant),
+        "wr": init_linear(ks[2], (d_model, d_attn), dtype, quant=quant,
+                          name=f"{name}.wr"),
+        "wk": init_linear(ks[3], (d_model, d_attn), dtype, quant=quant,
+                          name=f"{name}.wk"),
+        "wv": init_linear(ks[4], (d_model, d_attn), dtype, quant=quant,
+                          name=f"{name}.wv"),
+        "wg": init_linear(ks[5], (d_model, d_attn), dtype, quant=quant,
+                          name=f"{name}.wg"),
+        "wo": init_linear(ks[6], (d_attn, d_model), dtype, quant=quant,
+                          name=f"{name}.wo"),
         # data-dependent decay
         "w0": jnp.zeros((d_attn,), dtype) - 6.0,  # ~slow decay at init
         "decay_w1": init_linear(ks[7], (d_model, DECAY_LORA_R), dtype),
@@ -62,16 +67,16 @@ def init_rwkv_time_mix(key, d_model: int, n_heads: int, head_dim: int, dtype,
     }
 
 
-def rwkv_time_mix_specs(quant=None) -> Params:
+def rwkv_time_mix_specs(quant=None, name: str = "") -> Params:
     return {
         "mu": (None, "embed"),
         "mix_w1": linear_specs(("embed", None)),
         "mix_w2": (None, None, "embed"),
-        "wr": linear_specs(("embed", "qheads"), quant),
-        "wk": linear_specs(("embed", "qheads"), quant),
-        "wv": linear_specs(("embed", "qheads"), quant),
-        "wg": linear_specs(("embed", "qheads"), quant),
-        "wo": linear_specs(("qheads", "embed"), quant),
+        "wr": linear_specs(("embed", "qheads"), quant, f"{name}.wr"),
+        "wk": linear_specs(("embed", "qheads"), quant, f"{name}.wk"),
+        "wv": linear_specs(("embed", "qheads"), quant, f"{name}.wv"),
+        "wg": linear_specs(("embed", "qheads"), quant, f"{name}.wg"),
+        "wo": linear_specs(("qheads", "embed"), quant, f"{name}.wo"),
         "w0": ("qheads",),
         "decay_w1": linear_specs(("embed", None)),
         "decay_w2": (None, "qheads"),
@@ -81,22 +86,25 @@ def rwkv_time_mix_specs(quant=None) -> Params:
 
 
 def init_rwkv_channel_mix(key, d_model: int, d_ff: int, dtype,
-                          quant: QuantConfig | None = None) -> Params:
+                          quant=None, name: str = "") -> Params:
     k1, k2, k3 = jax.random.split(key, 3)
     return {
         "mu": jnp.zeros((2, d_model), dtype) + 0.5,  # (r, k) mixes
-        "wr": init_linear(k1, (d_model, d_model), dtype, quant=quant),
-        "wk": init_linear(k2, (d_model, d_ff), dtype, quant=quant),
-        "wv": init_linear(k3, (d_ff, d_model), dtype, quant=quant),
+        # wr is the sigmoid gate and is applied unquantized below
+        "wr": init_linear(k1, (d_model, d_model), dtype),
+        "wk": init_linear(k2, (d_model, d_ff), dtype, quant=quant,
+                          name=f"{name}.wk"),
+        "wv": init_linear(k3, (d_ff, d_model), dtype, quant=quant,
+                          name=f"{name}.wv"),
     }
 
 
-def rwkv_channel_mix_specs(quant=None) -> Params:
+def rwkv_channel_mix_specs(quant=None, name: str = "") -> Params:
     return {
         "mu": (None, "embed"),
         "wr": linear_specs(("embed", "embed_out")),
-        "wk": linear_specs(("embed", "ff"), quant),
-        "wv": linear_specs(("ff", "embed"), quant),
+        "wk": linear_specs(("embed", "ff"), quant, f"{name}.wk"),
+        "wv": linear_specs(("ff", "embed"), quant, f"{name}.wv"),
     }
 
 
@@ -205,9 +213,9 @@ def _wkv_chunked(r, k, v, log_w, u, state, chunk: int = 32,
 
 
 def rwkv_time_mix(p: Params, x: jax.Array, *, n_heads: int, head_dim: int,
-                  quant: QuantConfig | None = None, impl: str = "scan",
+                  quant=None, impl: str = "scan",
                   state: Params | None = None, wkv_chunk: int = 32,
-                  mesh=None):
+                  mesh=None, tap: list | None = None):
     """RWKV6 time mixing.  state (decode / carry) = {"shift": [B, 1, d],
     "wkv": [B, H, hd, hd]}; pass None for fresh (training) state."""
     from .common import act_spec, act_spec_seq, shard_hint
@@ -227,13 +235,13 @@ def rwkv_time_mix(p: Params, x: jax.Array, *, n_heads: int, head_dim: int,
     xr, xw, xk, xv, xg = mixed
 
     hspec = act_spec(mesh, B, heads=H)
-    r = shard_hint(dense(p["wr"], xr, quant).reshape(B, S, H, hd),
+    r = shard_hint(dense(p["wr"], xr, quant, tap=tap).reshape(B, S, H, hd),
                    hspec).astype(jnp.float32)
-    k = shard_hint(dense(p["wk"], xk, quant).reshape(B, S, H, hd),
+    k = shard_hint(dense(p["wk"], xk, quant, tap=tap).reshape(B, S, H, hd),
                    hspec).astype(jnp.float32)
-    v = shard_hint(dense(p["wv"], xv, quant).reshape(B, S, H, hd),
+    v = shard_hint(dense(p["wv"], xv, quant, tap=tap).reshape(B, S, H, hd),
                    hspec).astype(jnp.float32)
-    g = dense(p["wg"], xg, quant)
+    g = dense(p["wg"], xg, quant, tap=tap)
     log_w = _decay(p, xw).reshape(B, S, H, hd)
     # Clamp so |cumsum(log_w)| <= wkv_chunk * 2 < 80: the chunked form's
     # exp(+/-L) factors then never leave fp32 range.  (Decay floor of
@@ -264,14 +272,15 @@ def rwkv_time_mix(p: Params, x: jax.Array, *, n_heads: int, head_dim: int,
         + p["ln_out"]["bias"].astype(jnp.float32)
 
     out = dense(p["wo"], shard_hint(yf.astype(x.dtype) * jax.nn.silu(g),
-                                    sspec), quant)
+                                    sspec), quant, tap=tap)
     new_state = {"shift": x[:, -1:], "wkv": s_new}
     return out, new_state
 
 
 def rwkv_channel_mix(p: Params, x: jax.Array, *,
-                     quant: QuantConfig | None = None,
-                     state: Params | None = None, mesh=None):
+                     quant=None,
+                     state: Params | None = None, mesh=None,
+                     tap: list | None = None):
     """Squared-ReLU channel mix.  state = {"shift": [B, 1, d]}."""
     from .common import act_spec_seq, shard_hint
     B, S = x.shape[:2]
@@ -281,8 +290,9 @@ def rwkv_channel_mix(p: Params, x: jax.Array, *,
     sx = xx - x
     xk = shard_hint(x + sx * p["mu"][1][None, None], sspec)
     xr = shard_hint(x + sx * p["mu"][0][None, None], sspec)
-    kk = jnp.square(jax.nn.relu(dense(p["wk"], xk, quant)))
-    out = jax.nn.sigmoid(dense(p["wr"], xr, None)) * dense(p["wv"], kk, quant)
+    kk = jnp.square(jax.nn.relu(dense(p["wk"], xk, quant, tap=tap)))
+    out = (jax.nn.sigmoid(dense(p["wr"], xr, None))
+           * dense(p["wv"], kk, quant, tap=tap))
     return out, {"shift": x[:, -1:]}
 
 

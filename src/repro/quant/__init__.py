@@ -1,11 +1,23 @@
-"""QAT integration: calibration, distillation, gs-sweep harness."""
-from .qat import (
-    SweepResult,
-    calibrate_model,
-    distill_loss,
-    make_distill_loss_fn,
-    quant_variants,
-)
+"""QAT integration: per-layer policies, calibration, distillation, export.
 
-__all__ = ["SweepResult", "calibrate_model", "distill_loss",
-           "make_distill_loss_fn", "quant_variants"]
+``policy`` is imported eagerly (it depends only on ``repro.core``); the
+calibration/export modules are loaded lazily via PEP 562 because they pull
+in the model zoo / kernels, which themselves import ``repro.quant.policy``.
+"""
+from .policy import QuantPolicy, QuantRule, resolve_quant
+
+_QAT = ("SweepResult", "calibrate_model", "distill_loss",
+        "make_distill_loss_fn", "quant_variants")
+_EXPORT = ("export_quantized", "snap_params_po2")
+
+__all__ = ["QuantPolicy", "QuantRule", "resolve_quant", *_QAT, *_EXPORT]
+
+
+def __getattr__(name):
+    if name in _QAT:
+        from . import qat
+        return getattr(qat, name)
+    if name in _EXPORT:
+        from . import export
+        return getattr(export, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,173 @@
+"""Integer deployment export: QAT params -> INT8 codes + PO2 shift exponents.
+
+``export_quantized`` walks a calibrated params tree and replaces every
+quantized linear's float weight + ``QuantState`` with a
+``DeployedQuantState``:
+
+  * weight codes via ``po2_quantize_codes`` (INT8 at the per-channel
+    power-of-two scale ``2^floor(log2 aw)`` — bit-exact by construction);
+  * activation scale snapped to ``2^floor(log2 ax)``;
+  * PSUM shift exponents ``e_i = floor(ap_i) - ax_exp - aw_exp`` in
+    product-scale units, the exact layout ``kernels/apsq_matmul`` (and its
+    jnp oracle ``ref.apsq_matmul_ref``) consumes.
+
+The deployed tree runs through the ordinary model ``forward`` /
+``decode_step`` / ``serving.ServingEngine`` — ``models.common.dense``
+dispatches on ``DeployedQuantState`` into the true-integer path
+(``repro.core.deployed_dense``).  ``snap_params_po2`` returns the matching
+fake-quant reference (same tree, ax/aw snapped to the exported PO2 grid):
+deployed and snapped-fake outputs agree to within the rounding-mode gap of
+the hardware shifter (round-half-up vs round-half-even — at most one LSB
+of the largest PSUM scale per quantization step, see
+``tests/test_system.py::test_kernel_agrees_with_fakequant_reference``).
+
+Scan-stacked linears (leading ``n_units`` axis) are exported per unit via
+``vmap`` and stay scan-compatible.  MoE expert tensors keep their
+fake-quant state (per-expert integer export is future work — the shared
+``QuantState`` would need per-expert exponent banks).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DeployedQuantState,
+    QuantState,
+    effective_n_p,
+    po2_quantize_codes,
+)
+
+
+def _export_one(w: jax.Array, qp: QuantState):
+    """Export a single [K, *out] weight + state.
+
+    Returns ``(DeployedQuantState, n_clamped)`` where n_clamped counts
+    PSUM shifts that would have been negative (a PSUM scale finer than
+    the product scale; the hardware shifter cannot left-shift-quantize,
+    so they are clamped to 0)."""
+    spec = qp.spec
+    k = w.shape[0]
+    w2d = w.reshape(k, -1).astype(jnp.float32)
+    log2_aw = jnp.log2(jnp.maximum(qp.aw.astype(jnp.float32), 1e-30))
+    w_codes, aw_exp = po2_quantize_codes(w2d, log2_aw, bits=spec.w_bits)
+    ax_exp = jnp.floor(
+        jnp.log2(jnp.maximum(qp.ax.astype(jnp.float32), 1e-30))
+    ).astype(jnp.int32)
+    psum_exps = None
+    n_clamped = jnp.zeros((), jnp.int32)
+    if qp.ap is not None:
+        ap_exp = jnp.floor(qp.ap.astype(jnp.float32)).astype(jnp.int32)
+        if aw_exp.ndim:  # per-channel weights -> per-(tile, column) shifts
+            psum_exps = ap_exp[:, None] - ax_exp - aw_exp[None, :]
+        else:
+            psum_exps = ap_exp - ax_exp - aw_exp
+        n_clamped = jnp.sum(psum_exps < 0).astype(jnp.int32)
+        psum_exps = jnp.maximum(psum_exps, 0)
+    return DeployedQuantState(
+        w_codes=w_codes, ax_exp=ax_exp, aw_exp=aw_exp, psum_exps=psum_exps,
+        spec=spec, name=qp.name, out_dims=tuple(w.shape[1:])), n_clamped
+
+
+def _snap_one(qp: QuantState) -> QuantState:
+    """Snap ax/aw to the exported PO2 grid (fake-quant reference view)."""
+    aw = jnp.exp2(jnp.floor(
+        jnp.log2(jnp.maximum(qp.aw.astype(jnp.float32), 1e-30))))
+    ax = jnp.exp2(jnp.floor(
+        jnp.log2(jnp.maximum(qp.ax.astype(jnp.float32), 1e-30))))
+    return dataclasses.replace(qp, aw=aw, ax=ax)
+
+
+def _is_stacked(qp: QuantState) -> bool:
+    # per-linear ax is a scalar; a leading scan axis makes it 1-D
+    return qp.ax.ndim == 1
+
+
+def export_quantized(params, policy=None):
+    """Export every quantized linear to the integer deployment format.
+
+    Walks the params tree for ``{"w": ..., "qp": QuantState}`` subtrees
+    and replaces them with ``{"qp": DeployedQuantState}`` (the float
+    weight is dropped — the codes + exponents are the deployment
+    artifact).  ``policy`` optionally overrides each layer's spec (e.g.
+    re-deploying with a different per-layer gs without re-training PSUM
+    scales is legal as long as n_p is unchanged).
+
+    Returns ``(deploy_params, report)`` — report maps layer name to
+    {k, n, n_p, gs, mode, int8_bytes, clamped_exps}.
+    """
+    report: dict = {}
+
+    def export_linear(w, qp: QuantState):
+        spec = qp.spec
+        stacked = _is_stacked(qp)
+        if policy is not None:
+            override = policy.resolve(qp.name)
+            if override is not None and override.enabled:
+                if override.psum.mode != "none":
+                    if qp.ap is None:
+                        raise ValueError(
+                            f"{qp.name}: export policy requests psum mode "
+                            f"{override.psum.mode!r} but the layer was "
+                            f"calibrated without PSUM scales — re-run "
+                            f"calibration with that policy first")
+                    k = int(w.shape[1] if stacked else w.shape[0])
+                    n_p = qp.ap.shape[-1]
+                    eff = effective_n_p(k, override.psum.n_p)
+                    if eff != n_p:
+                        raise ValueError(
+                            f"{qp.name}: export policy n_p="
+                            f"{override.psum.n_p} (effective {eff} for "
+                            f"K={k}) != calibrated n_p={n_p}")
+                    override = dataclasses.replace(
+                        override,
+                        psum=dataclasses.replace(override.psum, n_p=eff))
+                qp = dataclasses.replace(qp, spec=override)
+                spec = override
+        if stacked:
+            # vmap over the scan-stacked leading axis; out_dims metadata is
+            # set inside _export_one from the per-unit weight shape
+            dq, n_clamped = jax.vmap(_export_one, in_axes=(0, 0))(w, qp)
+            n_units = int(w.shape[0])
+        else:
+            dq, n_clamped = _export_one(w, qp)
+            n_units = 1
+        clamped = int(jnp.sum(n_clamped))
+        prev = report.get(qp.name)
+        report[qp.name] = {
+            "k": int(dq.w_codes.shape[-2]), "n": int(dq.w_codes.shape[-1]),
+            "n_units": n_units,
+            "mode": spec.psum.mode if spec else "none",
+            "gs": spec.psum.gs if spec else None,
+            "n_p": spec.psum.n_p if spec else None,
+            "int8_bytes": int(dq.w_codes.size),
+            "clamped_exps": clamped,
+            # unstacked units share pattern-position names; count them
+            "count": 1 + (prev["count"] if prev else 0),
+        }
+        return {"qp": dq}
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            if "w" in tree and isinstance(tree.get("qp"), QuantState):
+                return export_linear(tree["w"], tree["qp"])
+            return {k: walk(v) for k, v in tree.items()}
+        return tree
+
+    return walk(params), report
+
+
+def snap_params_po2(params):
+    """Fake-quant reference matching the export: same tree, with every
+    ``QuantState``'s ax/aw snapped to ``2^floor(log2 .)``.  Running the
+    model on this tree reproduces the deployed integer path up to the
+    shifter's rounding mode."""
+    def walk(tree):
+        if isinstance(tree, QuantState):
+            return _snap_one(tree)
+        if isinstance(tree, dict):
+            return {k: walk(v) for k, v in tree.items()}
+        return tree
+    return walk(params)

@@ -1,116 +1,158 @@
-"""QAT integration: calibration over a model, distillation loss, gs sweep.
+"""QAT integration: capture-based calibration, distillation, gs sweep.
 
 The paper trains APSQ inside W8A8 QAT guided by a full-precision teacher
 (§IV-A).  Here:
 
-  * ``calibrate_model``  — one forward pass over a calibration batch that
-    refines every linear's activation & PSUM scales from the *running
-    accumulation* statistics (the quantity APSQ quantizes), by re-running
-    ``calibrate_dense`` at each quantized linear.  Implemented as a pure
-    tree surgery: we intercept ``dense`` via param-tree traversal, which
-    keeps the model code untouched.
+  * ``calibrate_model``  — a *pure function* over named linears: it runs
+    per-unit eager capture passes through the model (``quant_dense``'s
+    functional ``tap`` argument collects a ``TapRecord`` per linear — no
+    monkey-patching), refines every captured ``QuantState`` with
+    ``calibrate_dense`` (activation + running-accumulation PSUM scales),
+    and returns a new params tree.  Scan-stacked units
+    (``cfg.scan_layers=True``) are sliced per unit so linears that are
+    scan tracers in the training forward still get calibrated; MoE expert
+    GEMMs are captured at their dispatch buffers.  Each unit is re-applied
+    with its calibrated scales before the next unit's capture, so
+    downstream statistics see the quantized upstream path.
   * ``distill_loss``     — KL(teacher || student) on logits + CE mix,
     the standard QAT-with-teacher objective.
-  * ``gs_sweep``         — train/eval the same model across gs values
+  * ``quant_variants``   — named per-layer policies for the gs sweep
     (Table I reproduction harness; used by benchmarks/table1_accuracy).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import QuantConfig, calibrate_dense
+from repro.core import QuantState, calibrate_dense
 from repro.models.config import ModelConfig
-from repro.models.model import forward, lm_loss
+from repro.models.model import (
+    apply_layer,
+    apply_unit,
+    embed_inputs,
+    forward,
+    lm_loss,
+)
+from repro.models.common import apply_norm
+from .policy import QuantPolicy
 
 
 # ---------------------------------------------------------------------------
 # Calibration
 # ---------------------------------------------------------------------------
 
-def _collect_linears(params, path=()):
-    """Yield (path, subtree) for every quantized linear ({'w', 'qp'})."""
-    if isinstance(params, dict):
-        if "w" in params and "qp" in params:
-            yield path, params
-        for k, v in params.items():
-            if k in ("w", "qp"):
-                continue
-            yield from _collect_linears(v, path + (k,))
-
-
-def _tree_get(tree, path):
-    for k in path:
-        tree = tree[k]
+def _replace_quant_states(tree, calibrated: dict):
+    """Swap every ``QuantState`` whose name is in ``calibrated``."""
+    if isinstance(tree, QuantState):
+        return calibrated.get(tree.name, tree)
+    if isinstance(tree, dict):
+        return {k: _replace_quant_states(v, calibrated)
+                for k, v in tree.items()}
     return tree
 
 
-def _tree_set(tree, path, value):
-    if not path:
-        return value
-    out = dict(tree)
-    out[path[0]] = _tree_set(tree[path[0]], path[1:], value)
+def _calibrate_from_taps(taps, sample_tokens: int) -> dict:
+    out = {}
+    for rec in taps:
+        if rec.name in out:  # shared state invoked twice (e.g. MoE experts)
+            continue
+        xs = rec.x[:sample_tokens]
+        out[rec.name] = calibrate_dense(rec.qp, xs, rec.w)
     return out
 
 
-class _CalibTap:
-    """Activation-capturing stand-in installed around quantized linears."""
+def _calibrate_block(apply_fn, block_params, sample_tokens: int,
+                     passes: int = 2):
+    """Capture -> calibrate ``passes`` times over one block.
 
-    captured: dict = {}
+    One pass is not enough: a linear downstream of another quantized
+    linear *within the same block* (MLP wo, MoE experts' wo) sees inputs
+    produced with the uncalibrated generic PSUM scales, which can snap
+    small activations to zero.  The second pass re-captures with the
+    first pass's calibrated scales so downstream statistics are real.
+    ``apply_fn(p, tap)`` runs the block and fills the tap.
+    """
+    new_params = block_params
+    for _ in range(passes):
+        taps: list = []
+        apply_fn(new_params, taps)
+        calibrated = _calibrate_from_taps(taps, sample_tokens)
+        new_params = _replace_quant_states(new_params, calibrated)
+    return new_params
 
 
 def calibrate_model(params, cfg: ModelConfig, batch: dict,
                     sample_tokens: int = 512):
     """Refine every quantized linear's (ax, ap) from one forward pass.
 
-    Uses jax's pure callbacks-free approach: run the forward once with
-    quantization *disabled* while capturing each linear's input via
-    ``jax.experimental.io_callback``-free monkey patching is fragile, so we
-    instead exploit the structure: for LSQ the input statistics of layer i
-    only weakly depend on upstream quantization, so calibrating from the
-    float forward is the standard "one-shot" calibration.  We recompute
-    each linear's input by a partial forward — impractical for deep nets —
-    so instead we run the quantized forward *with capture enabled* through
-    ``capture_scope``.
+    Pure: returns a new params tree; ``params`` is not mutated.  Works for
+    scan-stacked and unstacked units, MoE, cross-attention, and the
+    encoder stack — every ``QuantState`` the forward touches is reachable
+    because units are applied one at a time in eager mode with the
+    capture tap threaded down to ``quant_dense``.
     """
-    from repro.models import common as _common
+    tokens = batch.get("tokens")
+    new_params = dict(params)
 
-    taps: dict = {}
-    orig_quant_dense = _common.quant_dense
+    def calibrate_unit_stack(units, x, *, enc_out, causal, stacked, name):
+        """One pass over a (stacked or dict-of-u{i}) unit container."""
+        if units is None:
+            return units, x
+        if stacked:
+            n = jax.tree.leaves(units)[0].shape[0]
+            get = lambda i: jax.tree.map(lambda a: a[i], units)
+        else:
+            n = len(units)
+            get = lambda i: units[f"u{i}"]
+        new_units = []
+        for i in range(n):
+            new_unit = _calibrate_block(
+                lambda pp, tap, _x=x: apply_unit(
+                    pp, _x, cfg=cfg, pos=0, enc_out=enc_out, causal=causal,
+                    tap=tap),
+                get(i), sample_tokens)
+            # re-apply with calibrated scales so the next unit's capture
+            # sees the quantized upstream activations
+            x, _ = apply_unit(new_unit, x, cfg=cfg, pos=0, enc_out=enc_out,
+                              causal=causal)
+            new_units.append(new_unit)
+        if stacked:
+            out = jax.tree.map(lambda *xs: jnp.stack(xs), *new_units)
+        else:
+            out = {f"u{i}": u for i, u in enumerate(new_units)}
+        return out, x
 
-    def capturing_quant_dense(x, w, qp, qcfg):
-        # Record a small sample of (x, w) per distinct qp id.  Tracers
-        # (scan-over-layers bodies) are skipped — calibrate with
-        # ``cfg.scan_layers=False`` to reach every linear.
-        key = id(qp.get("ap")) if qp and "ap" in qp else id(qp)
-        if key not in taps and not isinstance(x, jax.core.Tracer):
-            xs = x.reshape(-1, x.shape[-1])[:sample_tokens]
-            taps[key] = (xs, w, qp)
-        return orig_quant_dense(x, w, qp, qcfg)
+    enc_out = None
+    if cfg.encdec:
+        assert "enc_embeds" in batch, "enc-dec calibration needs enc_embeds"
+        xe = jnp.asarray(batch["enc_embeds"]).astype(cfg.jdtype)
+        enc = params["encoder"]
+        new_enc_units, xe = calibrate_unit_stack(
+            enc["units"], xe, enc_out=None, causal=False,
+            stacked=True, name="encoder.unit")
+        new_params["encoder"] = {**enc, "units": new_enc_units}
+        enc_out = apply_norm(enc["final_norm"], xe, cfg.norm)
 
-    _common.quant_dense = capturing_quant_dense
-    try:
-        forward(params, cfg, batch["tokens"],
-                embeds=batch.get("embeds"),
-                enc_embeds=batch.get("enc_embeds"))
-    finally:
-        _common.quant_dense = orig_quant_dense
+    x = embed_inputs(params, cfg, tokens, batch.get("embeds"))
+    new_units, x = calibrate_unit_stack(
+        params["units"], x, enc_out=enc_out, causal=True,
+        stacked=cfg.scan_layers, name="unit")
+    new_params["units"] = new_units
 
-    # Apply calibrate_dense to every captured linear and write back.
-    new_params = params
-    for path, lin in _collect_linears(params):
-        qp = lin["qp"]
-        key = id(qp.get("ap")) if "ap" in qp else id(qp)
-        if key not in taps:
-            continue
-        xs, w2d, _ = taps[key]
-        new_qp = calibrate_dense(qp, xs, w2d, cfg.quant)
-        new_lin = dict(lin)
-        new_lin["qp"] = new_qp
-        new_params = _tree_set(new_params, path, new_lin)
+    if cfg.n_rem:
+        new_rem = dict(params["rem"])
+        for i in range(cfg.n_rem):
+            new_rem[str(i)] = _calibrate_block(
+                lambda pp, tap, _x=x, _i=i: apply_layer(
+                    pp, _x, cfg=cfg, kind=cfg.block_pattern[_i], pos=0,
+                    enc_out=enc_out, tap=tap),
+                params["rem"][str(i)], sample_tokens)
+            x, _ = apply_layer(new_rem[str(i)], x, cfg=cfg,
+                               kind=cfg.block_pattern[i], pos=0,
+                               enc_out=enc_out)
+        new_params["rem"] = new_rem
     return new_params
 
 
@@ -159,11 +201,16 @@ class SweepResult:
     eval_loss: float
 
 
-def quant_variants(base: QuantConfig, gs_values=(1, 2, 3, 4),
-                   n_p: int = 8) -> dict:
-    """Baseline (W8A8, no PSUM quant) + APSQ at each gs + PSQ."""
-    out = {"baseline_w8a8": QuantConfig.w8a8()}
+def quant_variants(gs_values=(1, 2, 3, 4), n_p: int = 8) -> dict:
+    """Named policies: W8A8 baseline + APSQ at each gs + PSQ.
+
+    Each value is a (uniform) ``QuantPolicy`` consumable by
+    ``ModelConfig.with_quant`` / ``configs.get_config(quant=...)``.
+    """
+    from repro.core import QuantConfig
+    out = {"baseline_w8a8": QuantPolicy.uniform(QuantConfig.w8a8())}
     for gs in gs_values:
-        out[f"apsq_gs{gs}"] = QuantConfig.apsq(gs=gs, n_p=n_p)
-    out["psq"] = QuantConfig.psq(n_p=n_p)
+        out[f"apsq_gs{gs}"] = QuantPolicy.uniform(
+            QuantConfig.apsq(gs=gs, n_p=n_p))
+    out["psq"] = QuantPolicy.uniform(QuantConfig.psq(n_p=n_p))
     return out

@@ -93,6 +93,16 @@ class ServingEngine:
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
 
+    @classmethod
+    def from_exported(cls, params, cfg: ModelConfig, *, policy=None, **kw):
+        """Serve the integer deployment path: export the calibrated QAT
+        params (INT8 weight codes + PO2 shift exponents per layer, see
+        ``repro.quant.export``) and run every projection GEMM through the
+        ``kernels/apsq_matmul`` integer semantics inside decode."""
+        from repro.quant.export import export_quantized
+        deploy, _ = export_quantized(params, policy)
+        return cls(deploy, cfg, **kw)
+
     # -- jitted bodies ------------------------------------------------------
 
     def _prefill_impl(self, params, state, tokens, slot, length):

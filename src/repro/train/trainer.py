@@ -32,6 +32,7 @@ from repro.dist import (
     batch_spec,
     compress_tree_psum,
     optimizer_spec,
+    shard_map,
     tree_specs,
 )
 from repro.models.config import ModelConfig
@@ -117,11 +118,11 @@ def make_train_step(cfg: ModelConfig, ocfg: OptimConfig, tcfg: TrainConfig,
                 return jax.lax.pmean(loss, "pod"), g
 
             bspec = jax.tree.map(lambda _: P("pod"), batch)
-            loss, grads = jax.shard_map(
+            loss, grads = shard_map(
                 local_grads, mesh=mesh,
                 in_specs=(jax.tree.map(lambda _: P(), params), bspec),
                 out_specs=(P(), jax.tree.map(lambda _: P(), params)),
-                axis_names={"pod"}, check_vma=False,
+                axis_names={"pod"},
             )(params, batch)
         else:
             loss, grads = grads_fn(params, batch)

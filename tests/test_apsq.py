@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     QuantConfig,
@@ -17,10 +17,6 @@ from repro.core import (
     quant_dense,
     quant_params_init,
 )
-
-settings.register_profile("ci", max_examples=20, deadline=None)
-settings.load_profile("ci")
-
 
 @pytest.mark.parametrize("n_p", [1, 2, 3, 4, 5, 8, 9])
 @pytest.mark.parametrize("gs", [1, 2, 3, 4])
@@ -108,12 +104,13 @@ def test_quant_dense_error_small_after_calibration(mode):
 
 def test_grouping_reduces_error_vs_gs1():
     """Paper Table I: larger gs reduces cascaded rounding error (on
-    average).  Check total squared error over a batch of random GEMMs."""
+    average).  The effect is a fraction of a percent pre-training, so the
+    comparison needs a decent sample (8 GEMMs was seed-flaky)."""
     key = jax.random.PRNGKey(4)
     errs = {}
     for gs in (1, 4):
         tot = 0.0
-        for i in range(8):
+        for i in range(64):
             k = jax.random.fold_in(key, i)
             x = jax.random.normal(k, (8, 64))
             w = jax.random.normal(jax.random.fold_in(k, 1), (64, 16)) * 0.2

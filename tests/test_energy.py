@@ -1,6 +1,6 @@
 """Analytical energy model: eq (1)-(6) invariants + paper-pattern checks."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.energy import (
     AcceleratorConfig,

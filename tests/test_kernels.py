@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.apsq_matmul import (
     accumulator_vmem_bytes,
@@ -22,10 +22,6 @@ from repro.kernels.apsq_matmul import (
     quantize_psum,
     rshift_round,
 )
-
-settings.register_profile("ci", max_examples=15, deadline=None)
-settings.load_profile("ci")
-
 
 def _codes(key, shape):
     return jax.random.randint(key, shape, -128, 128, jnp.int8)

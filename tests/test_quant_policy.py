@@ -1,0 +1,412 @@
+"""Quantization API v2: per-layer policies, QuantState pytree, capture
+calibration, checkpoint upgrade, and integer deployment export."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+from repro.core import (
+    DeployedQuantState,
+    QuantConfig,
+    QuantState,
+    po2_quantize_codes,
+    quant_dense,
+    quant_params_init,
+)
+from repro.dist import tree_specs
+from repro.models.config import ModelConfig
+from repro.models.model import forward, init_lm, lm_specs
+from repro.quant import (
+    QuantPolicy,
+    calibrate_model,
+    export_quantized,
+    snap_params_po2,
+)
+
+MIX_CFG = QuantConfig.apsq(gs=2, n_p=4)
+FFN_CFG = QuantConfig.apsq(gs=4, n_p=8)
+POLICY = QuantPolicy.of(
+    ("*.mix.*", MIX_CFG),
+    ("*.ffn.*", FFN_CFG),
+    default=QuantConfig.w8a8(),
+)
+
+
+def _cfg(**kw):
+    base = dict(name="qp", family="dense", n_layers=2, d_model=32, n_heads=4,
+                n_kv_heads=2, d_ff=64, vocab=128, dtype="float32",
+                scan_layers=False, quant=QuantConfig.apsq(gs=2, n_p=4))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _quant_states(tree, out=None):
+    out = [] if out is None else out
+    if isinstance(tree, QuantState):
+        out.append(tree)
+    elif isinstance(tree, dict):
+        for v in tree.values():
+            _quant_states(v, out)
+    return out
+
+
+# ------------------------------ policy resolution --------------------------
+
+def test_policy_precedence_and_fallthrough():
+    p = QuantPolicy.of(
+        ("unit.0.mix.wq", MIX_CFG),
+        ("unit.*", FFN_CFG),
+        default=QuantConfig.w8a8(),
+    )
+    assert p.resolve("unit.0.mix.wq") is MIX_CFG          # first match wins
+    assert p.resolve("unit.0.mix.wk") is FFN_CFG          # glob
+    assert p.resolve("rem.0.ffn.wi").psum.mode == "none"  # default w8a8
+    assert QuantPolicy.of(("unit.*", MIX_CFG)).resolve("rem.0.x") is None
+
+
+def test_policy_uniform_equals_global_config():
+    cfg_global = _cfg()
+    cfg_policy = _cfg(quant=QuantConfig(), quant_policy=QuantPolicy.uniform(
+        QuantConfig.apsq(gs=2, n_p=4)))
+    pg = init_lm(jax.random.PRNGKey(0), cfg_global)
+    pp = init_lm(jax.random.PRNGKey(0), cfg_policy)
+    for a, b in zip(jax.tree.leaves(pg), jax.tree.leaves(pp)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert jax.tree.structure(pg) == jax.tree.structure(pp)
+
+
+def test_heterogeneous_policy_resolves_per_layer():
+    cfg = _cfg(quant=QuantConfig(), quant_policy=POLICY)
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    wq = p["units"]["u0"]["0"]["mix"]["wq"]["qp"]
+    wi = p["units"]["u0"]["0"]["ffn"]["wi"]["qp"]
+    assert wq.spec.psum.gs == 2 and wq.spec.psum.n_p == 4
+    assert wi.spec.psum.gs == 4 and wi.spec.psum.n_p == 8
+    assert wq.ap.shape == (4,) and wi.ap.shape == (8,)
+    assert wq.name == "unit.0.mix.wq" and wi.name == "unit.0.ffn.wi"
+    # end-to-end forward with mixed specs
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    lg = jax.jit(lambda pp: forward(pp, cfg, tok))(p)
+    assert not bool(jnp.any(jnp.isnan(lg)))
+
+
+# ------------------------------ QuantState pytree --------------------------
+
+def test_quant_state_dict_access_and_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    qp = quant_params_init(w, QuantConfig.apsq(gs=2, n_p=4), name="lin")
+    assert "ap" in qp and "aw" in qp and qp.get("missing") is None
+    assert qp["ax"].shape == ()
+    # jit round-trip preserves data, spec, and name
+    qp2 = jax.jit(lambda q: q)(qp)
+    assert isinstance(qp2, QuantState)
+    assert qp2.spec == qp.spec and qp2.name == "lin"
+    np.testing.assert_array_equal(np.asarray(qp.ap), np.asarray(qp2.ap))
+    # effective n_p clamps to a divisor of K and lands in the spec
+    qp3 = quant_params_init(w, QuantConfig.apsq(gs=2, n_p=5))
+    assert qp3.spec.psum.n_p == 4 and qp3.ap.shape == (4,)
+
+
+def test_quant_state_under_scan_and_grad():
+    cfg = _cfg(scan_layers=True, n_layers=4)
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    qp = p["units"]["0"]["mix"]["wq"]["qp"]
+    assert isinstance(qp, QuantState) and qp.ap.shape == (4, 4)  # stacked
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+
+    def loss(pp):
+        return jnp.mean(jnp.square(forward(pp, cfg, tok)))
+
+    g = jax.grad(loss)(p)
+    gq = g["units"]["0"]["mix"]["wq"]["qp"]
+    assert isinstance(gq, QuantState)  # grads keep the typed structure
+    assert gq.ap.shape == (4, 4)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))
+
+
+def test_specs_cover_quantized_params():
+    cfg = _cfg(scan_layers=True, n_layers=4)
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    from repro.launch.mesh import make_smoke_mesh
+    specs = tree_specs(lm_specs(cfg), shapes, make_smoke_mesh())
+    # output mirrors the params structure exactly (jit in_shardings ready)
+    assert jax.tree.structure(jax.tree.map(lambda _: 0, specs)) \
+        == jax.tree.structure(jax.tree.map(lambda _: 0, shapes))
+
+
+# ------------------------------ checkpoint ---------------------------------
+
+def test_checkpoint_roundtrips_quant_state():
+    cfg = _cfg()
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, {"params": p})
+        tree, manifest = restore(d)
+    assert manifest["quant_states"]
+    states = _quant_states(tree["params"])
+    assert states and all(isinstance(s, QuantState) for s in states)
+    orig = {s.name: s for s in _quant_states(p)}
+    for s in states:
+        assert s.spec == orig[s.name].spec
+        np.testing.assert_array_equal(np.asarray(s.ap),
+                                      np.asarray(orig[s.name].ap))
+
+
+def test_checkpoint_upgrades_legacy_dict_params():
+    """Pre-API-v2 checkpoints stored raw {"aw","ax","ap"} dicts; restore
+    upgrades them when given a policy."""
+    cfg = _cfg()
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+
+    def degrade(t):  # what an old checkpoint's tree looked like
+        if isinstance(t, QuantState):
+            return t.as_dict()
+        if isinstance(t, dict):
+            return {k: degrade(v) for k, v in t.items()}
+        return t
+
+    legacy = degrade(p)
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, {"params": legacy})
+        # simulate the old writer: no quantizer metadata in the manifest
+        import json, os, glob
+        mf = glob.glob(os.path.join(d, "step-*", "manifest.json"))[0]
+        m = json.load(open(mf))
+        m.pop("quant_states", None)
+        json.dump(m, open(mf, "w"))
+        tree, _ = restore(d, quant_policy=QuantPolicy.uniform(
+            QuantConfig.apsq(gs=2, n_p=4)))
+    states = _quant_states(tree["params"])
+    assert states and all(isinstance(s, QuantState) for s in states)
+    by_name = {s.name: s for s in states}
+    assert "unit.0.mix.wq" in by_name
+    assert by_name["unit.0.mix.wq"].spec.psum.mode == "apsq"
+    # restored tree runs
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, 4), 0, cfg.vocab)
+    tree = jax.tree.map(jnp.asarray, tree)
+    assert not bool(jnp.any(jnp.isnan(forward(tree["params"], cfg, tok))))
+
+
+# ------------------------------ calibration --------------------------------
+
+def test_calibrate_reaches_scan_stacked_units():
+    """Linears inside lax.scan bodies were silently skipped by the old
+    monkey-patching calibration; the capture API reaches all of them."""
+    cfg = _cfg(scan_layers=True, n_layers=4)
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    p2 = calibrate_model(p, cfg, {"tokens": tok})
+    before = {s.name: s for s in _quant_states(p)}
+    n_updated = 0
+    for s in _quant_states(p2):
+        b = before[s.name]
+        for unit in range(s.ap.shape[0]):  # every unit slice must move
+            assert not np.allclose(np.asarray(b.ap[unit]),
+                                   np.asarray(s.ap[unit])), (s.name, unit)
+        n_updated += 1
+    assert n_updated == len(before) > 0
+    # purity: the input tree is untouched
+    for s in _quant_states(p):
+        np.testing.assert_array_equal(np.asarray(s.ap),
+                                      np.asarray(before[s.name].ap))
+    assert not bool(jnp.any(jnp.isnan(forward(p2, cfg, tok))))
+
+
+def test_calibrate_reaches_moe_experts():
+    cfg = _cfg(mlp="moe", n_experts=4, top_k=2, scan_layers=False)
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    p2 = calibrate_model(p, cfg, {"tokens": tok})
+    before = {s.name: s for s in _quant_states(p)}
+    moe_names = [n for n in before if ".ffn.w" in n]
+    assert moe_names, "moe expert quantizers missing"
+    after = {s.name: s for s in _quant_states(p2)}
+    changed = [n for n in moe_names
+               if not np.allclose(np.asarray(before[n].ap),
+                                  np.asarray(after[n].ap))]
+    assert len(changed) == len(moe_names), (changed, moe_names)
+
+
+# ------------------------------ export -------------------------------------
+
+def test_export_codes_bit_exact_vs_po2_quantize_codes():
+    cfg = _cfg()
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    p2 = calibrate_model(p, cfg, {"tokens": tok})
+    dep, report = export_quantized(p2)
+    lin = p2["units"]["u0"]["0"]["mix"]["wq"]
+    dq = dep["units"]["u0"]["0"]["mix"]["wq"]["qp"]
+    assert isinstance(dq, DeployedQuantState)
+    w2d = lin["w"].reshape(lin["w"].shape[0], -1).astype(jnp.float32)
+    codes, exps = po2_quantize_codes(
+        w2d, jnp.log2(jnp.maximum(lin["qp"].aw.astype(jnp.float32), 1e-30)))
+    np.testing.assert_array_equal(np.asarray(dq.w_codes), np.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(dq.aw_exp), np.asarray(exps))
+    assert report["unit.0.mix.wq"]["mode"] == "apsq"
+
+
+def test_export_integer_path_bit_exact_vs_kernel_reference():
+    """Per-tensor weight scales -> [n_p] exponents, the exact layout the
+    Pallas kernel consumes; deployed execution == integer oracle == kernel
+    (interpret mode), all driven by export_quantized output."""
+    from repro.core import deployed_dense
+    from repro.kernels.apsq_matmul import apsq_matmul_int8, apsq_matmul_ref
+
+    cfg = QuantConfig(enabled=True, per_channel_w=False,
+                      psum=MIX_CFG.psum)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 16)) * 0.1
+    from repro.core import calibrate_dense
+    qp = calibrate_dense(quant_params_init(w, cfg, name="lin"), x, w)
+    dep, _ = export_quantized({"lin": {"w": w, "qp": qp}})
+    dq = dep["lin"]["qp"]
+    assert dq.psum_exps.ndim == 1  # kernel-compatible layout
+
+    xc = jnp.clip(jnp.round(x / jnp.exp2(dq.ax_exp.astype(jnp.float32))),
+                  -128, 127).astype(jnp.int8)
+    oracle = apsq_matmul_ref(xc, dq.w_codes, dq.psum_exps,
+                             n_p=dq.psum_exps.shape[0], gs=cfg.psum.gs)
+    kern = apsq_matmul_int8(xc, dq.w_codes, dq.psum_exps, gs=cfg.psum.gs,
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(oracle), np.asarray(kern))
+
+    scale = float(jnp.exp2((dq.ax_exp + dq.aw_exp).astype(jnp.float32)))
+    got = deployed_dense(x, dq)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(oracle, np.float32) * scale,
+                               rtol=0, atol=0)
+
+
+def test_deployed_model_matches_snapped_fakequant():
+    """Integer deployment == fake-quant reference on the exported PO2
+    grid, up to the shifter rounding mode (<= 2 LSB per PSUM quantizer,
+    same bound as test_system's kernel-agreement test)."""
+    cfg = _cfg()
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    p2 = calibrate_model(p, cfg, {"tokens": tok})
+    dep, _ = export_quantized(p2)
+    snapped = snap_params_po2(p2)
+    lg_dep = forward(dep, cfg, tok)
+    lg_fake = forward(snapped, cfg, tok)
+    err = float(jnp.max(jnp.abs(lg_dep - lg_fake)))
+    ref = float(jnp.max(jnp.abs(lg_fake))) + 1e-6
+    assert err / ref < 0.05, (err, ref)
+
+
+def test_exported_engine_matches_fakequant_engine():
+    """ServingEngine consumes the export directly; greedy decode matches
+    the snapped fake-quant engine token-for-token on a smoke model."""
+    from repro.serving import Request, ServingEngine
+    cfg = _cfg()
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    p2 = calibrate_model(p, cfg, {"tokens": tok})
+
+    prompt = np.arange(6) % cfg.vocab
+    eng_int = ServingEngine.from_exported(p2, cfg, max_batch=1, cache_len=64,
+                                          prefill_chunk=8)
+    done_int = eng_int.run([Request(uid=0, tokens=prompt, max_new_tokens=5)])
+    eng_fake = ServingEngine(snap_params_po2(p2), cfg, max_batch=1,
+                             cache_len=64, prefill_chunk=8)
+    done_fake = eng_fake.run([Request(uid=0, tokens=prompt,
+                                      max_new_tokens=5)])
+    assert done_int[0].out == done_fake[0].out
+
+
+def test_checkpoint_upgrade_keeps_params_and_moments_compatible():
+    """Legacy trainer checkpoints carry {'params', 'opt'} where the adam
+    moments mirror the param tree; the upgrade must give both the same
+    QuantState metadata (it is treedef aux data) or tree.map over
+    (params, m) explodes."""
+    cfg = _cfg()
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+
+    def degrade(t):
+        if isinstance(t, QuantState):
+            return t.as_dict()
+        if isinstance(t, dict):
+            return {k: degrade(v) for k, v in t.items()}
+        return t
+
+    legacy_p = degrade(p)
+    legacy_m = jax.tree.map(jnp.zeros_like, legacy_p)
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, {"params": legacy_p, "opt": {"m": legacy_m}})
+        import json, os, glob
+        mf = glob.glob(os.path.join(d, "step-*", "manifest.json"))[0]
+        m = json.load(open(mf))
+        m.pop("quant_states", None)
+        json.dump(m, open(mf, "w"))
+        tree, _ = restore(d, quant_policy=QuantPolicy.uniform(
+            QuantConfig.apsq(gs=2, n_p=4)))
+    # identical treedefs -> two-tree map works (the optimizer update path)
+    jax.tree.map(lambda a, b: a, tree["params"], tree["opt"]["m"])
+    names_p = {s.name for s in _quant_states(tree["params"])}
+    names_m = {s.name for s in _quant_states(tree["opt"]["m"])}
+    assert names_p == names_m and "unit.0.mix.wq" in names_p
+
+
+def test_checkpoint_roundtrips_deployed_tree():
+    cfg = _cfg()
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    dep, _ = export_quantized(calibrate_model(p, cfg, {"tokens": tok}))
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, dep)
+        tree, manifest = restore(d)
+    kinds = {m["kind"] for m in manifest["quant_states"].values()}
+    assert kinds == {"DeployedQuantState"}
+    tree = jax.tree.map(jnp.asarray, tree)
+    lg_a = forward(dep, cfg, tok)
+    lg_b = forward(tree, cfg, tok)
+    np.testing.assert_array_equal(np.asarray(lg_a), np.asarray(lg_b))
+
+
+def test_export_override_accepts_effective_n_p():
+    """A policy whose n_p was clamped at init (non-divisor of K) must be
+    re-usable verbatim at export time."""
+    cfg = QuantConfig.apsq(gs=2, n_p=5)  # K=16 -> effective n_p = 4
+    w = jax.random.normal(jax.random.PRNGKey(0), (16, 8)) * 0.1
+    qp = quant_params_init(w, cfg, name="lin")
+    assert qp.spec.psum.n_p == 4
+    dep, report = export_quantized(
+        {"lin": {"w": w, "qp": qp}},
+        policy=QuantPolicy.uniform(QuantConfig.apsq(gs=2, n_p=5)))
+    assert report["lin"]["n_p"] == 4
+
+
+def test_export_override_rejects_uncalibrated_psum():
+    """Upgrading a w8a8-calibrated layer to apsq at export time cannot
+    synthesize PSUM scales; it must fail loudly, not silently deploy
+    baseline W8A8 under an 'apsq' label."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (16, 8)) * 0.1
+    qp = quant_params_init(w, QuantConfig.w8a8(), name="lin")
+    with pytest.raises(ValueError, match="calibrated without PSUM"):
+        export_quantized({"lin": {"w": w, "qp": qp}},
+                         policy=QuantPolicy.uniform(
+                             QuantConfig.apsq(gs=2, n_p=4)))
+
+
+def test_export_policy_override_and_per_layer_gs():
+    """Re-deploy with a different gs per layer group without retraining
+    (n_p must match the calibrated tiling)."""
+    cfg = _cfg(quant=QuantConfig(), quant_policy=POLICY)
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    p2 = calibrate_model(p, cfg, {"tokens": tok})
+    override = QuantPolicy.of(
+        ("*.mix.*", QuantConfig.apsq(gs=4, n_p=4)),   # same n_p, new gs
+        default=None)
+    dep, report = export_quantized(p2, policy=override)
+    assert report["unit.0.mix.wq"]["gs"] == 4
+    assert report["unit.0.ffn.wi"]["gs"] == 4         # FFN untouched (gs=4)
+    assert not bool(jnp.any(jnp.isnan(forward(dep, cfg, tok))))
+    bad = QuantPolicy.of(("*.mix.*", QuantConfig.apsq(gs=2, n_p=8)))
+    with pytest.raises(ValueError):
+        export_quantized(p2, policy=bad)
