@@ -2,34 +2,47 @@
 
 On this CPU container the kernel runs in interpret mode, so wall-clock is
 not a TPU signal; what we measure and report:
-  * bit-exactness vs the integer oracle across a shape sweep,
+  * bit-exactness vs the integer oracle across a shape sweep (including
+    ragged K and per-column exponent layouts),
+  * oracle-vs-pallas *backend* parity + throughput side by side on one
+    exported layer, at the serving shapes that matter (decode M=1,
+    batched prefill) — the ``repro.exec`` path ``ServingEngine`` runs,
   * accumulator traffic (bytes) of APSQ banks vs the INT32 baseline —
     the quantity the paper's energy claim rides on (beta 4 -> 1),
   * throughput of the jitted *fake-quant* APSQ GEMM vs plain GEMM on CPU
     (QAT-time overhead of the technique).
+
+``--smoke`` (the CI kernel-backend job) runs the correctness sweep and
+the backend parity section only, at reduced shapes.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import QuantConfig, quant_dense, quant_params_init, \
     calibrate_dense
+from repro.exec import backend_parity_check
 from repro.kernels.apsq_matmul import (
     accumulator_vmem_bytes,
     apsq_matmul_int8,
     apsq_matmul_ref,
     choose_exps,
 )
+from repro.quant import export_quantized
 
 from .common import timed
 
 
-def run(print_fn=print):
+def run_correctness(print_fn=print):
     key = jax.random.PRNGKey(0)
-    # 1. correctness sweep (interpret mode)
+    cells = [(32, 128, 64, 8, 2), (64, 256, 128, 4, 4),
+             (16, 64, 32, 8, 1), (128, 512, 128, 16, 3),
+             (8, 100, 32, 8, 2),   # ragged K -> remainder PSUM group
+             (1, 192, 64, 6, 2)]   # decode shape M=1
     ok = 0
-    for (m, k, n, n_p, gs) in [(32, 128, 64, 8, 2), (64, 256, 128, 4, 4),
-                               (16, 64, 32, 8, 1), (128, 512, 128, 16, 3)]:
+    for (m, k, n, n_p, gs) in cells:
         x = jax.random.randint(key, (m, k), -128, 128, jnp.int8)
         w = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -128,
                                128, jnp.int8)
@@ -38,16 +51,59 @@ def run(print_fn=print):
         out = apsq_matmul_int8(x, w, exps, gs=gs, interpret=True)
         assert np.array_equal(np.asarray(ref), np.asarray(out))
         ok += 1
-    print_fn(f"kernel,bit_exact_cells={ok}/4")
+    print_fn(f"kernel,bit_exact_cells={ok}/{len(cells)}")
+    return ok
 
-    # 2. accumulator bytes: the beta 4->1 story per output tile
+
+def run_backends(print_fn=print, smoke: bool = False):
+    """Oracle vs Pallas backend on one exported layer, side by side.
+
+    Builds the full calibrate -> export artifact (per-channel weight
+    scales, so the kernel runs the [n_p, N] exponent layout) and times
+    ``execute_gemm`` per backend at the decode (M=1) and prefill shapes.
+    """
+    k, n = (256, 128) if smoke else (1024, 512)
+    key = jax.random.PRNGKey(1)
+    xs = {"decode_m1": jax.random.normal(key, (1, k)),
+          "prefill": jax.random.normal(key, (32 if smoke else 256, k))}
+    w = jax.random.normal(jax.random.fold_in(key, 2), (k, n)) * 0.05
+    cfg = QuantConfig.apsq(gs=2, n_p=8)
+    qp = calibrate_dense(quant_params_init(w, cfg, name="lin"),
+                         xs["prefill"], w)
+    dep, _ = export_quantized({"lin": {"w": w, "qp": qp}})
+    dq = dep["lin"]["qp"]
+
+    all_equal = True
+    for shape_name, x in xs.items():
+        _, times, equal = backend_parity_check(
+            dq, x, reps=2 if smoke else 5, warmup=1 if smoke else 2)
+        all_equal &= equal
+        print_fn(f"kernel,backend,{shape_name},M={x.shape[0]},K={k},N={n},"
+                 f"oracle_us={times['oracle']:.0f},"
+                 f"pallas_us={times['pallas']:.0f},bit_equal={equal}")
+    assert all_equal, "oracle and pallas backends disagree"
+    return all_equal
+
+
+def run(print_fn=print, smoke: bool = False):
+    key = jax.random.PRNGKey(0)
+    # 1. correctness sweep (interpret mode)
+    ok = run_correctness(print_fn)
+
+    # 2. execution-backend parity + throughput (the serving path)
+    run_backends(print_fn, smoke=smoke)
+
+    if smoke:
+        return ok
+
+    # 3. accumulator bytes: the beta 4->1 story per output tile
     for gs in (1, 2, 4):
         v = accumulator_vmem_bytes(128, 128, gs)
         print_fn(f"kernel,accumulator_bytes,gs={gs},"
                  f"apsq={v['apsq_banks']},int32={v['baseline_int32']},"
                  f"saving={1 - v['apsq_banks'] / v['baseline_int32']:.2f}")
 
-    # 3. QAT-time overhead of fake-quant APSQ vs plain matmul (CPU)
+    # 4. QAT-time overhead of fake-quant APSQ vs plain matmul (CPU)
     xf = jax.random.normal(key, (256, 1024))
     wf = jax.random.normal(jax.random.fold_in(key, 2), (1024, 512)) * 0.05
     cfg = QuantConfig.apsq(gs=2, n_p=8)
@@ -62,7 +118,7 @@ def run(print_fn=print):
     print_fn(f"kernel,qat_overhead,plain_us={t0:.0f},apsq_us={t1:.0f},"
              f"x{t1 / t0:.1f},rel_err={rel:.4f}")
 
-    # 4. INT8 KV-cache decode attention (second kernel): accuracy vs fp32
+    # 5. INT8 KV-cache decode attention (second kernel): accuracy vs fp32
     #    reference + the bandwidth story (decode cells are HBM-bound).
     from repro.kernels.int8_kv_attention import (
         cache_bytes, fp_attention_ref, int8_kv_attention_f32)
@@ -81,4 +137,8 @@ def run(print_fn=print):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="correctness + backend parity only (CI job)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

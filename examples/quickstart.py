@@ -10,6 +10,11 @@
 4. Per-layer policy on a whole model: attention GEMMs at gs=2/n_p=4,
    FFN GEMMs at gs=4/n_p=8 (the RAE reconfigures per layer), capture-based
    calibration, integer export, and deployed serving.
+5. Backend selection: the calibrate -> export -> kernel-serving flow.
+   Deployed GEMMs dispatch through the ``repro.exec`` registry —
+   ``oracle`` (jnp reference), ``pallas`` (the real kernel; interpret
+   mode on CPU), ``auto`` (kernel on TPU, oracle elsewhere) — and greedy
+   decodes are token-for-token identical across backends.
 """
 import jax
 import jax.numpy as jnp
@@ -95,3 +100,19 @@ engine = ServingEngine(deploy, cfg, max_batch=2, cache_len=64,
 done = engine.run([Request(uid=0, tokens=np.arange(6) % cfg.vocab,
                            max_new_tokens=8)])
 print(f"integer-deployed engine decoded: {done[0].out}")
+
+# --- 5. backend selection: serve the calibrated model through the kernel ----
+# ``from_exported`` exports and serves in one call; ``backend=`` picks the
+# executor.  "auto" (default) runs the Pallas kernel on TPU and the
+# bit-identical jnp oracle elsewhere; pinning "pallas" on CPU exercises
+# the kernel in interpret mode — same integers, token-for-token.
+prompt = np.arange(6) % cfg.vocab
+decodes = {}
+for backend in ("oracle", "pallas"):
+    eng = ServingEngine.from_exported(params, cfg, max_batch=1, cache_len=64,
+                                      prefill_chunk=8, backend=backend)
+    decodes[backend] = eng.run([Request(uid=1, tokens=prompt,
+                                        max_new_tokens=6)])[0].out
+print(f"\nkernel-served decode ({'==' if decodes['oracle'] == decodes['pallas'] else '!='} oracle): "
+      f"{decodes['pallas']}")
+assert decodes["oracle"] == decodes["pallas"]

@@ -1,5 +1,13 @@
 #!/usr/bin/env bash
-# Tier-1 CI entrypoint: install dev deps and run the test suite.
+# CI entrypoint.
+#
+#   scripts/ci.sh                 tier-1: full test suite (extra args -> pytest)
+#   scripts/ci.sh kernel-backend  interpret-mode kernel-backend job: the
+#                                 kernel-vs-oracle parity grid + exec-backend
+#                                 tests + a kernel_bench --smoke pass, so
+#                                 kernel regressions fail fast and in
+#                                 isolation from the (slower) tier-1 run.
+#
 # Collection regressions (missing modules, import errors) fail the run
 # because pytest errors out before running a single test.
 set -euo pipefail
@@ -8,4 +16,11 @@ cd "$(dirname "$0")/.."
 python -m pip install --quiet -r requirements-dev.txt
 python -m pip install --quiet "jax>=0.4.30" numpy 2>/dev/null || true
 
-python -m pytest -x -q "$@"
+if [[ "${1:-}" == "kernel-backend" ]]; then
+    shift
+    python -m pytest -q tests/test_kernels.py tests/test_exec.py "$@"
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.kernel_bench --smoke
+else
+    python -m pytest -x -q "$@"
+fi

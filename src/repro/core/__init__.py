@@ -31,6 +31,7 @@ from .layers import (
     effective_n_p,
     quant_dense,
     quant_params_init,
+    tied_head_weight,
 )
 
 __all__ = [
@@ -41,5 +42,5 @@ __all__ = [
     "apsq_accumulate", "apsq_accumulate_reference", "apsq_matmul",
     "psq_accumulate", "DeployedQuantState", "PsumQuantConfig", "QuantConfig",
     "QuantState", "TapRecord", "calibrate_dense", "deployed_dense",
-    "effective_n_p", "quant_dense", "quant_params_init",
+    "effective_n_p", "quant_dense", "quant_params_init", "tied_head_weight",
 ]

@@ -274,6 +274,7 @@ def quant_dense(
     cfg: QuantConfig | None = None,
     *,
     tap: list | None = None,
+    backend=None,
 ) -> jax.Array:
     """``x @ w`` with optional W8A8 fake quant and PSQ/APSQ PSUM handling.
 
@@ -283,10 +284,12 @@ def quant_dense(
     ``DeployedQuantState`` (integer path; ``w`` is ignored).
     ``tap``: optional capture list — when executing eagerly, a
     ``TapRecord`` for this linear is appended (calibration capture API).
+    ``backend``: execution backend for the deployed integer path
+    (``repro.exec``; name, instance, or None for the ``auto`` default).
     Returns [..., *w.shape[1:]] in x.dtype.
     """
     if isinstance(qp, DeployedQuantState):
-        return deployed_dense(x, qp)
+        return deployed_dense(x, qp, backend=backend)
     spec = _spec_of(qp, cfg)
     out_shape = x.shape[:-1] + w.shape[1:]
     if spec is None or not spec.enabled or qp is None:
@@ -336,33 +339,32 @@ def quant_dense(
 # Integer deployment execution
 # ---------------------------------------------------------------------------
 
-def deployed_dense(x: jax.Array, dq: DeployedQuantState) -> jax.Array:
+def tied_head_weight(table: jax.Array) -> jax.Array:
+    """The tied-embedding logits weight: table [V, ...D] -> [D, V] fp32.
+
+    One definition shared by head calibration (``quant.qat``), integer
+    export (``quant.export``), and the fake-quant forward
+    (``models.model.logits_from_hidden``) — the three views must see the
+    identical matrix or the calibrated scales/codes stop matching the
+    GEMM actually executed.
+    """
+    return table.reshape(table.shape[0], -1).T.astype(jnp.float32)
+
+
+def deployed_dense(x: jax.Array, dq: DeployedQuantState, *,
+                   backend=None) -> jax.Array:
     """Integer GEMM on exported codes, semantics of ``kernels/apsq_matmul``.
 
     Activations are quantized to INT8 at the PO2 scale ``2^ax_exp``; the
     INT32 PSUM tiles follow Algorithm 1 with shift exponents ``psum_exps``
     in product-scale units (per-tile, or per-(tile, column) when weights
-    are per-channel); the result is rescaled to float.  Pure jnp, so it
-    runs under jit/scan/vmap — the Pallas kernel executes the same
-    semantics on TPU (``apsq_matmul_int8`` is bit-exact vs this path for
-    per-tensor weight scales).
-    """
-    from repro.kernels.apsq_matmul import ref  # lazy: pallas import is heavy
+    are per-channel); the result is rescaled to float.
 
-    spec = dq.spec or QuantConfig.w8a8()
-    k, n = dq.w_codes.shape[-2], dq.w_codes.shape[-1]
-    out_shape = x.shape[:-1] + dq.out_dims
-    x2 = x.reshape(-1, k).astype(jnp.float32)
-    qn, qpmax = qrange(spec.a_bits, True)
-    xc = jnp.clip(jnp.round(x2 * jnp.exp2(-dq.ax_exp.astype(jnp.float32))),
-                  qn, qpmax).astype(jnp.int8)
-    if dq.psum_exps is None:
-        y = ref.baseline_matmul_ref(xc, dq.w_codes)
-    else:
-        n_p = dq.psum_exps.shape[0]
-        gs = n_p if spec.psum.mode == "psq" else spec.psum.gs
-        # ref.apsq_matmul_ref broadcasts exps rows over columns, so both
-        # [n_p] and [n_p, N] exponent layouts run through the same oracle.
-        y = ref.apsq_matmul_ref(xc, dq.w_codes, dq.psum_exps, n_p=n_p, gs=gs)
-    scale = jnp.exp2((dq.ax_exp + dq.aw_exp).astype(jnp.float32))
-    return (y.astype(jnp.float32) * scale).astype(x.dtype).reshape(out_shape)
+    The actual integer GEMM is dispatched through the ``repro.exec``
+    backend registry: ``oracle`` (pure jnp, runs under jit/scan/vmap),
+    ``pallas`` (the real kernel; interpret mode off-TPU), or ``auto``
+    (default: pallas on TPU, oracle elsewhere) — all bit-identical.
+    """
+    from repro.exec import execute_gemm  # lazy: exec imports kernels
+
+    return execute_gemm(dq, x, backend=backend)

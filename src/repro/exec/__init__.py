@@ -1,0 +1,26 @@
+"""Execution-backend layer: how a deployed integer GEMM is computed.
+
+One registry (``oracle`` | ``pallas`` | ``auto``) behind one entry point,
+``execute_gemm(deployed_layer, x)`` — see ``backends.py`` for the design.
+"""
+from .backends import (
+    AutoBackend,
+    DEFAULT_BACKEND,
+    ExecBackend,
+    OracleBackend,
+    PallasBackend,
+    available_backends,
+    backend_parity_check,
+    execute_expert_gemm,
+    execute_gemm,
+    get_backend,
+    quantize_activations,
+    register_backend,
+)
+
+__all__ = [
+    "AutoBackend", "DEFAULT_BACKEND", "ExecBackend", "OracleBackend",
+    "PallasBackend", "available_backends", "backend_parity_check",
+    "execute_expert_gemm", "execute_gemm", "get_backend",
+    "quantize_activations", "register_backend",
+]

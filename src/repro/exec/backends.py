@@ -1,0 +1,237 @@
+"""Execution backends for deployed integer GEMMs.
+
+The deployed model (``DeployedQuantState`` params, see ``repro.quant.export``)
+describes *what* to compute — INT8 codes, PO2 shift exponents, Algorithm-1
+PSUM handling — but not *how*.  This module owns the "how": a small registry
+of backends behind one entry point, ``execute_gemm``:
+
+  * ``oracle`` — the pure-jnp integer semantics
+    (``kernels/apsq_matmul/ref``).  Runs anywhere, shape-polymorphic,
+    differentiable-adjacent; the reference all other backends must match
+    bit-for-bit.
+  * ``pallas`` — the real ``kernels/apsq_matmul`` Pallas TPU kernel
+    (INT8 PSUM banks in VMEM).  On CPU it runs in interpret mode, so the
+    same code path is CI-testable; on TPU it is the hardware datapath the
+    paper's energy claims (§V) ride on.
+  * ``auto``   — ``pallas`` when the default JAX backend is TPU, else
+    ``oracle``.  The serving default: decode hits the kernel on hardware
+    and stays bit-identical on CPU.
+
+Every projection GEMM in the model zoo dispatches here when its params are
+deployed (``models.common.dense`` -> ``core.deployed_dense`` ->
+``execute_gemm``), including MoE expert banks and the tied-embedding head,
+so QAT fake-quant, the oracle, and the kernel are provably one semantics
+on a single code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DeployedQuantState, QuantConfig, qrange
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+class ExecBackend:
+    """How an integer GEMM on exported codes is computed.
+
+    ``int_gemm`` consumes INT8 activation codes [M, K], a deployed layer's
+    weight codes [K, N] and PSUM shift exponents ([n_p] or [n_p, N]; None
+    for plain W8A8) and returns the INT32 result in product-scale units.
+    """
+
+    name = "base"
+
+    def int_gemm(self, x_codes: jax.Array, w_codes: jax.Array,
+                 psum_exps: jax.Array | None, *, gs: int) -> jax.Array:
+        raise NotImplementedError
+
+    def resolve(self) -> "ExecBackend":
+        """The concrete backend that will execute (identity for leaves)."""
+        return self
+
+    def __repr__(self):
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+class OracleBackend(ExecBackend):
+    """Pure-jnp Algorithm-1 semantics (``ref.apsq_matmul_ref``)."""
+
+    name = "oracle"
+
+    def int_gemm(self, x_codes, w_codes, psum_exps, *, gs):
+        from repro.kernels.apsq_matmul import ref  # lazy: keep import light
+        if psum_exps is None:
+            return ref.baseline_matmul_ref(x_codes, w_codes)
+        n_p = int(psum_exps.shape[0])
+        return ref.apsq_matmul_ref(x_codes, w_codes, psum_exps,
+                                   n_p=n_p, gs=gs)
+
+
+class PallasBackend(ExecBackend):
+    """The real Pallas kernel (interpret mode off-TPU, hardware on TPU).
+
+    ``interpret=None`` auto-selects (interpret unless running on TPU);
+    pass ``interpret=True`` to force the interpreter (CI determinism).
+    """
+
+    name = "pallas"
+
+    def __init__(self, interpret: bool | None = None):
+        self.interpret = interpret
+
+    def int_gemm(self, x_codes, w_codes, psum_exps, *, gs):
+        from repro.kernels.apsq_matmul import (
+            apsq_matmul_int8,
+            baseline_matmul_int8,
+        )
+        if psum_exps is None:
+            return baseline_matmul_int8(x_codes, w_codes, n_p=1,
+                                        interpret=self.interpret)
+        return apsq_matmul_int8(x_codes, w_codes, psum_exps, gs=gs,
+                                interpret=self.interpret)
+
+
+class AutoBackend(ExecBackend):
+    """``pallas`` on TPU, ``oracle`` elsewhere (resolved at trace time)."""
+
+    name = "auto"
+
+    def resolve(self) -> ExecBackend:
+        if jax.default_backend() == "tpu":
+            return get_backend("pallas")
+        return get_backend("oracle")
+
+    def int_gemm(self, x_codes, w_codes, psum_exps, *, gs):
+        return self.resolve().int_gemm(x_codes, w_codes, psum_exps, gs=gs)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register_backend(name: str, backend: ExecBackend) -> None:
+    _REGISTRY[name] = backend
+
+
+register_backend("oracle", OracleBackend())
+register_backend("pallas", PallasBackend())
+register_backend("auto", AutoBackend())
+
+DEFAULT_BACKEND = "auto"
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(backend=None) -> ExecBackend:
+    """Resolve a backend name / instance / None (-> the ``auto`` default)."""
+    if backend is None:
+        backend = DEFAULT_BACKEND
+    if isinstance(backend, ExecBackend):
+        return backend
+    try:
+        return _REGISTRY[backend]
+    except KeyError:
+        raise KeyError(f"unknown exec backend {backend!r}; "
+                       f"known: {available_backends()}") from None
+
+
+# ---------------------------------------------------------------------------
+# The one entry point the model zoo dispatches through
+# ---------------------------------------------------------------------------
+
+def quantize_activations(x2d: jax.Array, ax_exp: jax.Array,
+                         a_bits: int = 8) -> jax.Array:
+    """Float activations [M, K] -> INT8 codes at the PO2 scale 2^ax_exp."""
+    qn, qp = qrange(a_bits, True)
+    xf = x2d.astype(jnp.float32)
+    return jnp.clip(jnp.round(xf * jnp.exp2(-ax_exp.astype(jnp.float32))),
+                    qn, qp).astype(jnp.int8)
+
+
+def execute_gemm(dq: DeployedQuantState, x: jax.Array, *,
+                 backend=None) -> jax.Array:
+    """Run one deployed linear: quantize -> integer GEMM -> rescale.
+
+    ``x`` is [..., K] float; the result is [..., *dq.out_dims] in x.dtype.
+    The leading dims are flattened to M (decode's [B, 1, C] becomes M=B,
+    prefill's [B, T, C] becomes M=B*T) — the backend sees one [M, K] x
+    [K, N] integer GEMM, pads to its block constraints (including ragged
+    ``K % n_p`` via a zero-contribution remainder PSUM group), and the
+    INT32 product-scale output is rescaled by ``2^(ax_exp + aw_exp)``.
+    """
+    backend = get_backend(backend).resolve()
+    spec = dq.spec or QuantConfig.w8a8()
+    k = dq.w_codes.shape[-2]
+    out_shape = x.shape[:-1] + dq.out_dims
+    xc = quantize_activations(x.reshape(-1, k), dq.ax_exp, spec.a_bits)
+    gs = 1
+    if dq.psum_exps is not None:
+        n_p = int(dq.psum_exps.shape[0])
+        gs = n_p if spec.psum.mode == "psq" else spec.psum.gs
+    y = backend.int_gemm(xc, dq.w_codes, dq.psum_exps, gs=gs)
+    scale = jnp.exp2((dq.ax_exp + dq.aw_exp).astype(jnp.float32))
+    return (y.astype(jnp.float32) * scale).astype(x.dtype).reshape(out_shape)
+
+
+def backend_parity_check(dq: DeployedQuantState, x: jax.Array, *,
+                         backends=("oracle", "pallas"), reps: int = 1,
+                         warmup: int = 1):
+    """Run one deployed GEMM through several backends, side by side.
+
+    Returns ``(outs, times_us, bit_equal)``: per-backend outputs,
+    per-backend wall-clock (jitted, post-warmup, microseconds), and
+    whether every output is bit-identical to the first.  Shared by
+    ``benchmarks/kernel_bench.py`` and the dry-run's per-cell
+    ``backend_parity`` report so parity is measured one way everywhere.
+    """
+    import time
+
+    import numpy as np
+
+    outs, times = {}, {}
+    for be in backends:
+        resolved = get_backend(be)
+        f = jax.jit(lambda a, _b=resolved: execute_gemm(dq, a, backend=_b))
+        for _ in range(warmup):
+            jax.block_until_ready(f(x))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = jax.block_until_ready(f(x))
+        times[resolved.name] = (time.perf_counter() - t0) / reps * 1e6
+        outs[resolved.name] = out
+    vals = list(outs.values())
+    bit_equal = all(np.array_equal(np.asarray(vals[0]), np.asarray(v))
+                    for v in vals[1:])
+    return outs, times, bit_equal
+
+
+def execute_expert_gemm(dq: DeployedQuantState, x: jax.Array, *,
+                        backend=None) -> jax.Array:
+    """Per-expert deployed GEMM: x [E, C, K] against stacked codes.
+
+    ``dq`` carries a leading expert axis on every data leaf (w_codes
+    [E, K, N], ax_exp [E], aw_exp [E, ...], psum_exps [E, n_p, ...] — the
+    per-expert exponent banks emitted by ``export_quantized``).  Experts
+    are unrolled (E is static and the per-expert shapes are identical, so
+    each expert reuses one compiled kernel specialization).
+    """
+    n_exp = int(dq.w_codes.shape[0])
+    outs = []
+    for e in range(n_exp):
+        dqe = dataclasses.replace(
+            dq, w_codes=dq.w_codes[e], ax_exp=dq.ax_exp[e],
+            aw_exp=dq.aw_exp[e],
+            psum_exps=None if dq.psum_exps is None else dq.psum_exps[e])
+        outs.append(execute_gemm(dqe, x[e], backend=backend))
+    return jnp.stack(outs)

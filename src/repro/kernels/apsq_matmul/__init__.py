@@ -16,6 +16,7 @@ from .ref import (
     baseline_matmul_ref,
     choose_exps,
     dequantize_psum,
+    pad_ragged_k,
     psum_tiles,
     quantize_psum,
     rshift_round,
@@ -25,6 +26,6 @@ __all__ = [
     "accumulator_vmem_bytes", "apsq_matmul_kernel", "baseline_matmul_kernel",
     "apsq_matmul_f32", "apsq_matmul_int8", "baseline_matmul_int8",
     "calibrate_exps", "quantize_operands", "apsq_matmul_ref",
-    "baseline_matmul_ref", "choose_exps", "dequantize_psum", "psum_tiles",
-    "quantize_psum", "rshift_round",
+    "baseline_matmul_ref", "choose_exps", "dequantize_psum", "pad_ragged_k",
+    "psum_tiles", "quantize_psum", "rshift_round",
 ]

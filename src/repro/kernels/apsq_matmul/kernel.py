@@ -48,9 +48,23 @@ def _dequantize(code, e):
     return jnp.left_shift(code.astype(jnp.int32), jnp.asarray(e, jnp.int32))
 
 
+def _read_exp(exp_ref, i):
+    """Shift exponent(s) for PSUM tile ``i`` (static int or program_id).
+
+    1-D exps ([n_p] in SMEM): scalar per tile — per-tensor weight scales.
+    2-D exps ([n_p, block_n] in VMEM): one exponent row per tile — the
+    per-channel export layout (``psum_exps[:, N]``); the [1, bn] row
+    broadcasts over the [bm, bn] accumulator in the shift helpers.
+    """
+    if len(exp_ref.shape) == 2:
+        return exp_ref[pl.dslice(i, 1), :]
+    return exp_ref[i]
+
+
 def _apsq_kernel(exp_ref, x_ref, w_ref, out_ref, banks_ref, *, n_p: int, gs: int):
     """One grid step = one PSUM tile T_pk of one (i, j) output tile."""
     k = pl.program_id(2)
+    exp = functools.partial(_read_exp, exp_ref)
     prod = jax.lax.dot_general(
         x_ref[...],
         w_ref[...],
@@ -60,7 +74,7 @@ def _apsq_kernel(exp_ref, x_ref, w_ref, out_ref, banks_ref, *, n_p: int, gs: int
 
     if n_p == 1:
         # Single PSUM tile: output quantization only (Algorithm 1 line 2).
-        out_ref[...] = _dequantize(_quantize(prod, exp_ref[0]), exp_ref[0])
+        out_ref[...] = _dequantize(_quantize(prod, exp(0)), exp(0))
         return
 
     last = n_p - 1
@@ -68,18 +82,18 @@ def _apsq_kernel(exp_ref, x_ref, w_ref, out_ref, banks_ref, *, n_p: int, gs: int
 
     @pl.when(k == 0)
     def _first():  # AP*_0 = Q_0(T_p0)
-        banks_ref[0] = _quantize(prod, exp_ref[0])
+        banks_ref[0] = _quantize(prod, exp(0))
 
     @pl.when((k > 0) & (k % gs == 0) & (k < last))
     def _group_start():  # APSQ: fold the previous group's banks back in
         acc = prod
         for j in range(gs):  # bank j holds tile (k - gs + j)
-            acc = acc + _dequantize(banks_ref[j], exp_ref[k - gs + j])
-        banks_ref[0] = _quantize(acc, exp_ref[k])
+            acc = acc + _dequantize(banks_ref[j], exp(k - gs + j))
+        banks_ref[0] = _quantize(acc, exp(k))
 
     @pl.when((k > 0) & (k % gs != 0) & (k < last))
     def _tail():  # plain PSQ on a tail tile
-        code = _quantize(prod, exp_ref[k])
+        code = _quantize(prod, exp(k))
         pl.store(banks_ref, (pl.dslice(k % gs, 1), slice(None), slice(None)),
                  code[None])
 
@@ -90,11 +104,11 @@ def _apsq_kernel(exp_ref, x_ref, w_ref, out_ref, banks_ref, *, n_p: int, gs: int
         if last % gs == 0:  # final tile is itself a group start -> APSQ
             if last > 0:
                 for j in range(gs):
-                    acc = acc + _dequantize(banks_ref[j], exp_ref[last - gs + j])
+                    acc = acc + _dequantize(banks_ref[j], exp(last - gs + j))
         else:  # mid-group: fold the stored tiles since last_start
             for l in range(last_start, last):
-                acc = acc + _dequantize(banks_ref[l - last_start], exp_ref[l])
-        out_ref[...] = _dequantize(_quantize(acc, exp_ref[last]), exp_ref[last])
+                acc = acc + _dequantize(banks_ref[l - last_start], exp(l))
+        out_ref[...] = _dequantize(_quantize(acc, exp(last)), exp(last))
 
 
 def _baseline_kernel(x_ref, w_ref, out_ref, acc_ref, *, n_p: int):
@@ -149,11 +163,18 @@ def apsq_matmul_kernel(
     """[M, K] int8 @ [K, N] int8 -> [M, N] int32 (product-scale units).
 
     ``M % block_m == 0``, ``N % block_n == 0``, ``K % n_p == 0`` — the ops.py
-    wrapper pads.  ``exps`` is [n_p] int32, exponents >= 0.
+    wrapper pads.  ``exps`` is int32, exponents >= 0: [n_p] (per-tensor
+    weight scales; SMEM scalars) or [n_p, N] (per-channel export layout;
+    every grid step sees the full n_p rows of its block_n column slice).
     """
     m, kdim = x_codes.shape
     n = w_codes.shape[1]
     assert kdim % n_p == 0 and m % block_m == 0 and n % block_n == 0
+    if exps.ndim == 2:
+        assert exps.shape == (n_p, n), (exps.shape, n_p, n)
+        exp_spec = pl.BlockSpec((n_p, block_n), lambda i, j, k: (0, j))
+    else:
+        exp_spec = pl.BlockSpec(memory_space=pltpu.SMEM)  # [n_p] scalars
     block_k = kdim // n_p
 
     grid = (m // block_m, n // block_n, n_p)
@@ -161,7 +182,7 @@ def apsq_matmul_kernel(
         functools.partial(_apsq_kernel, n_p=n_p, gs=gs),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),  # exps: [n_p] scalars
+            exp_spec,
             pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
             pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
         ],

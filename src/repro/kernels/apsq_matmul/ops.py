@@ -38,21 +38,25 @@ def apsq_matmul_int8(
 ) -> jax.Array:
     """INT8 GEMM with Algorithm-1 PSUM handling; returns INT32 [M, N].
 
-    ``n_p`` is taken from ``exps.shape[0]``; ``K % n_p`` must be 0 (the
-    PSUM tiling is exact, as in the paper's ``C_i`` multiple of ``P_ci``).
+    ``n_p`` is taken from ``exps.shape[0]``.  Ragged ``K % n_p != 0`` is
+    handled by zero-padding K into a remainder PSUM group (zero codes
+    contribute nothing to the final tile's partial sum).  ``exps`` is
+    [n_p] (per-tensor) or [n_p, N] (per-channel weight scales).
     """
     if interpret is None:
         interpret = _default_interpret()
     m, k = x_codes.shape
     n = w_codes.shape[1]
     n_p = int(exps.shape[0])
-    if k % n_p:
-        raise ValueError(f"K={k} not divisible by n_p={n_p}")
+    x_codes, w_codes = ref.pad_ragged_k(x_codes, w_codes, n_p)
     bm, bn = min(block_m, _ceil_mult(m, 8)), min(block_n, _ceil_mult(n, 128))
     xp = _pad_to(x_codes, bm, 1)
     wp = _pad_to(w_codes, 1, bn)
+    exps = exps.astype(jnp.int32)
+    if exps.ndim == 2:  # pad the column axis alongside w (exponent 0 is id)
+        exps = _pad_to(exps, 1, bn)
     out = apsq_matmul_kernel(
-        xp, wp, exps.astype(jnp.int32),
+        xp, wp, exps,
         n_p=n_p, gs=int(gs), block_m=bm, block_n=bn, interpret=interpret,
     )
     return out[:m, :n]
@@ -72,8 +76,7 @@ def baseline_matmul_int8(
         interpret = _default_interpret()
     m, k = x_codes.shape
     n = w_codes.shape[1]
-    if k % n_p:
-        raise ValueError(f"K={k} not divisible by n_p={n_p}")
+    x_codes, w_codes = ref.pad_ragged_k(x_codes, w_codes, n_p)
     bm, bn = min(block_m, _ceil_mult(m, 8)), min(block_n, _ceil_mult(n, 128))
     xp = _pad_to(x_codes, bm, 1)
     wp = _pad_to(w_codes, 1, bn)

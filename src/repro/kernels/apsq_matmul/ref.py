@@ -48,11 +48,30 @@ def dequantize_psum(code: jax.Array, e: jax.Array) -> jax.Array:
     return jnp.left_shift(code.astype(jnp.int32), jnp.asarray(e, jnp.int32))
 
 
+def pad_ragged_k(x_codes: jax.Array, w_codes: jax.Array, n_p: int):
+    """Zero-pad K up to ``n_p * ceil(K / n_p)`` (remainder PSUM group).
+
+    Zero codes contribute nothing to any partial sum, so a ragged final
+    K-tile behaves exactly like a full tile whose trailing channels are
+    masked out — the "zero-contribution" remainder group.
+    """
+    k = x_codes.shape[1]
+    pad = (-k) % n_p
+    if pad:
+        x_codes = jnp.pad(x_codes, ((0, 0), (0, pad)))
+        w_codes = jnp.pad(w_codes, ((0, pad), (0, 0)))
+    return x_codes, w_codes
+
+
 def psum_tiles(x_codes: jax.Array, w_codes: jax.Array, n_p: int) -> jax.Array:
-    """[n_p, M, N] INT32 partial-sum tiles of ``x @ w`` split along K."""
+    """[n_p, M, N] INT32 partial-sum tiles of ``x @ w`` split along K.
+
+    Ragged ``K % n_p`` is handled by zero-padding the final tile
+    (``pad_ragged_k``), so any (K, n_p) combination is legal.
+    """
+    x_codes, w_codes = pad_ragged_k(x_codes, w_codes, n_p)
     m, k = x_codes.shape
     n = w_codes.shape[1]
-    assert k % n_p == 0, (k, n_p)
     kt = k // n_p
     xt = x_codes.reshape(m, n_p, kt).astype(jnp.int32)
     wt = w_codes.reshape(n_p, kt, n).astype(jnp.int32)

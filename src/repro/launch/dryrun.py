@@ -196,13 +196,84 @@ def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh, rules=None, **kw):
 
 
 # ---------------------------------------------------------------------------
+# Quant-policy sweeps + execution-backend parity
+# ---------------------------------------------------------------------------
+
+def describe_policy(quant) -> list:
+    """Human-readable rule list for a QuantPolicy (JSON-report friendly)."""
+    def one(cfg):
+        if cfg is None:
+            return "float"
+        if not cfg.enabled:
+            return "disabled"
+        if cfg.psum.mode == "none":
+            return f"w{cfg.w_bits}a{cfg.a_bits}"
+        return (f"{cfg.psum.mode}(gs={cfg.psum.gs},n_p={cfg.psum.n_p},"
+                f"bits={cfg.psum.bits})")
+
+    rules = [[r.pattern, one(r.config)]
+             for r in getattr(quant, "rules", ())]
+    rules.append(["<default>", one(getattr(quant, "default", quant))])
+    return rules
+
+
+def backend_parity_report(cfg: ModelConfig, m: int = 8) -> dict:
+    """Oracle-vs-pallas execution check at the arch's GEMM shape.
+
+    Exports one calibrated [d_model, d_model] linear under the cfg's
+    policy and runs it through ``repro.exec.backend_parity_check``
+    (pallas in interpret mode off-TPU) — the side-by-side parity +
+    wall-clock the roofline table reports next to each quantized cell.
+    """
+    from repro.core import quant_params_init, calibrate_dense
+    from repro.exec import backend_parity_check
+    from repro.quant.export import export_quantized
+    from repro.quant.policy import resolve_quant
+
+    # Probe the policy at representative layer names and prefer a
+    # PSUM-quantized resolution — a sweep like "ffn_only" must be
+    # parity-checked on the APSQ path it exists to measure, not on
+    # whatever plain-W8A8 config the first attention layer resolves to.
+    probe, resolved = None, None
+    for name in ("unit.0.mix.wq", "unit.0.ffn.wi", "rem.0.mix.wq",
+                 "encoder.unit.0.mix.wq", "head"):
+        r = resolve_quant(cfg.policy, name)
+        if r is None:
+            continue
+        if resolved is None or (resolved.psum.mode == "none"
+                                and r.psum.mode != "none"):
+            probe, resolved = name, r
+        if resolved.psum.mode != "none":
+            break
+    if resolved is None:
+        return {"skipped": "no quantized layers under this policy"}
+    k = min(cfg.d_model, 512)  # representative reduction dim, CPU-cheap
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, k)) * 0.05
+    qp = calibrate_dense(quant_params_init(w, resolved, name=probe), x, w)
+    dep, _ = export_quantized({"lin": {"w": w, "qp": qp}})
+    _, times, bit_equal = backend_parity_check(dep["lin"]["qp"], x)
+    return {"bit_equal": bit_equal, "layer": probe, "shape": [m, k, k],
+            "mode": resolved.psum.mode, "gs": resolved.psum.gs,
+            "n_p": resolved.psum.n_p,
+            **{f"{name}_us": round(t, 1) for name, t in times.items()}}
+
+
+# ---------------------------------------------------------------------------
 # Lower + compile + analyze one cell
 # ---------------------------------------------------------------------------
 
 def run_cell(arch: str, cell_name: str, *, multi_pod: bool = False,
-             quant: str = "none", verbose: bool = True,
+             quant="none", verbose: bool = True,
              overrides: dict | None = None, tag: str = "",
-             rules=None, **kw) -> dict:
+             rules=None, backend_parity: bool = False,
+             quant_name: str | None = None, **kw) -> dict:
+    """Lower + compile one cell.  ``quant`` is a preset string, an explicit
+    ``QuantConfig``, or a per-layer ``QuantPolicy`` (heterogeneous policies
+    from ``repro.quant.policy_presets`` — the ``--quant-policy`` sweep);
+    ``backend_parity`` attaches an oracle-vs-pallas execution check for
+    the arch's deployed GEMM shape to the report."""
     cfg = get_config(arch, quant=quant)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
@@ -210,9 +281,15 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = math.prod(mesh.devices.shape)
     mesh_name = "2x16x16" if multi_pod else "16x16"
+    quant_label = quant_name or (
+        quant if isinstance(quant, str) else type(quant).__name__)
     report = {"arch": arch, "cell": cell_name, "mesh": mesh_name,
-              "quant": quant, "tag": tag, "ok": False,
+              "quant": quant_label, "tag": tag, "ok": False,
               "overrides": {k: str(v) for k, v in (overrides or {}).items()}}
+    if not isinstance(quant, str):
+        report["quant_policy"] = describe_policy(quant)
+    if backend_parity:
+        report["backend_parity"] = backend_parity_report(cfg)
     t0 = time.time()
     try:
         step, args, in_sh, out_sh = build_cell(cfg, cell, mesh, rules=rules,
@@ -292,11 +369,30 @@ def main():
                     choices=("single", "multi", "both"))
     ap.add_argument("--quant", default="none",
                     choices=("none", "w8a8", "psq", "apsq"))
+    ap.add_argument("--quant-policy", default=None,
+                    help="named heterogeneous per-layer policy "
+                         "(repro.quant.policy_presets; overrides --quant) "
+                         "or 'all' to sweep every preset")
+    ap.add_argument("--backend-parity", action="store_true",
+                    help="attach an oracle-vs-pallas execute_gemm parity "
+                         "+ timing check to each quantized cell report")
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--compress", action="store_true",
                     help="INT8 DCN gradient compression (multi-pod train)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
+
+    quants = [(args.quant, args.quant)]
+    if args.quant_policy is not None:
+        from repro.quant import policy_presets
+        presets = policy_presets()
+        names = (sorted(presets) if args.quant_policy == "all"
+                 else [args.quant_policy])
+        try:
+            quants = [(f"policy_{n}", presets[n]) for n in names]
+        except KeyError:
+            raise SystemExit(f"unknown --quant-policy {args.quant_policy!r};"
+                             f" known: {sorted(presets)} or 'all'")
 
     archs = ARCH_NAMES if args.arch == "all" else (args.arch,)
     meshes = {"single": (False,), "multi": (True,),
@@ -310,14 +406,17 @@ def main():
                 print(f"[dryrun] SKIP {arch} {cell_name} (inapplicable)")
                 continue
             for mp in meshes:
-                kw = {}
-                if cell_name.startswith("train"):
-                    kw = {"microbatches": args.microbatches,
-                          "compress": args.compress}
-                rep = run_cell(arch, cell_name, multi_pod=mp,
-                               quant=args.quant, **kw)
-                save_report(rep, args.out)
-                failures += 0 if rep["ok"] else 1
+                for qname, quant in quants:
+                    kw = {}
+                    if cell_name.startswith("train"):
+                        kw = {"microbatches": args.microbatches,
+                              "compress": args.compress}
+                    rep = run_cell(arch, cell_name, multi_pod=mp,
+                                   quant=quant, quant_name=qname,
+                                   backend_parity=args.backend_parity,
+                                   **kw)
+                    save_report(rep, args.out)
+                    failures += 0 if rep["ok"] else 1
     print(f"[dryrun] done; {failures} failures")
     return failures
 

@@ -310,6 +310,7 @@ def attention_block(
     use_rope: bool = True,
     mesh=None,
     tap: list | None = None,
+    backend=None,
 ):
     """Projections + RoPE + attention.  Two modes:
 
@@ -322,11 +323,12 @@ def attention_block(
     non-causal, no rope on kv by default (encoder output is position-free).
     """
     B, S, _ = x.shape
-    q = dense(p["wq"], x, quant, tap=tap).reshape(B, S, n_heads, head_dim)
+    q = dense(p["wq"], x, quant, tap=tap,
+              backend=backend).reshape(B, S, n_heads, head_dim)
     src = xkv if xkv is not None else x
-    k = dense(p["wk"], src, quant, tap=tap).reshape(
+    k = dense(p["wk"], src, quant, tap=tap, backend=backend).reshape(
         B, src.shape[1], n_kv_heads, head_dim)
-    v = dense(p["wv"], src, quant, tap=tap).reshape(
+    v = dense(p["wv"], src, quant, tap=tap, backend=backend).reshape(
         B, src.shape[1], n_kv_heads, head_dim)
     # Keep attention compute sharded over heads (TP) — without these
     # constraints GSPMD can lose the head sharding through the reshape +
@@ -358,5 +360,5 @@ def attention_block(
         new_cache = {"k": k, "v": v}
 
     out = dense(p["wo"], out.reshape(B, S, n_heads * head_dim), quant,
-                tap=tap)
+                tap=tap, backend=backend)
     return out, new_cache

@@ -64,18 +64,20 @@ def linear_specs(logical: tuple, quant=None, name: str = "") -> Params:
 
 
 def dense(p: Params, x: jax.Array, quant=None, *,
-          tap: list | None = None) -> jax.Array:
+          tap: list | None = None, backend=None) -> jax.Array:
     """x[..., K] @ w[K, *out] with optional W8A8/APSQ fake quant.
 
     Dispatch is driven by the param subtree: a ``QuantState`` quantizes
     with its own resolved spec, a ``DeployedQuantState`` runs the integer
     deployment path, a legacy ``{"aw","ax","ap"}`` dict uses the global
     ``quant`` config, and no ``qp`` at all is a plain float GEMM.
-    ``tap`` threads the calibration capture list down to ``quant_dense``.
+    ``tap`` threads the calibration capture list down to ``quant_dense``;
+    ``backend`` selects the integer execution backend (``repro.exec``)
+    for deployed params.
     """
     qp = p.get("qp")
     if isinstance(qp, DeployedQuantState):
-        return deployed_dense(x, qp)
+        return deployed_dense(x, qp, backend=backend)
     w = p["w"]
     if qp is None or (not isinstance(qp, QuantState)
                       and (quant is None or not quant.enabled)):
@@ -198,13 +200,14 @@ def mlp_specs(kind: str = "swiglu", quant=None, name: str = "") -> Params:
 
 
 def apply_mlp(p: Params, x: jax.Array, kind: str = "swiglu",
-              quant=None, tap: list | None = None) -> jax.Array:
+              quant=None, tap: list | None = None,
+              backend=None) -> jax.Array:
     if kind == "swiglu":
-        h = (jax.nn.silu(dense(p["wg"], x, quant, tap=tap))
-             * dense(p["wi"], x, quant, tap=tap))
+        h = (jax.nn.silu(dense(p["wg"], x, quant, tap=tap, backend=backend))
+             * dense(p["wi"], x, quant, tap=tap, backend=backend))
     else:
-        h = jax.nn.gelu(dense(p["wi"], x, quant, tap=tap))
-    return dense(p["wo"], h, quant, tap=tap)
+        h = jax.nn.gelu(dense(p["wi"], x, quant, tap=tap, backend=backend))
+    return dense(p["wo"], h, quant, tap=tap, backend=backend)
 
 
 # ---------------------------------------------------------------------------

@@ -171,12 +171,15 @@ def apply_layer(
     enc_out: jax.Array | None = None,
     causal: bool = True,
     tap: list | None = None,
+    backend=None,
 ):
     """One pre-norm block.  ``state`` not None => decode (single token).
 
     Returns (x, new_state); new_state is None when training without cache.
     ``tap`` is the calibration capture list, threaded down to every
     quantized linear (``repro.core.TapRecord`` per eager invocation).
+    ``backend`` selects the integer execution backend (``repro.exec``)
+    for deployed params and reaches every projection GEMM in the block.
     """
     # (§Perf it4, refuted: an explicit seq-shard constraint on the
     # residual stream added reshards — GSPMD already propagates SP from
@@ -194,18 +197,20 @@ def apply_layer(
             head_dim=cfg.hd, rope_fraction=cfg.rope_fraction,
             rope_theta=cfg.rope_theta, causal=causal, window=window,
             softcap=cfg.softcap, quant=quant, cache=cache, pos=pos,
-            mesh=mesh, tap=tap)
+            mesh=mesh, tap=tap, backend=backend)
         new_state = kv
     elif kind == "rwkv":
         out, tm_state = rwkv_time_mix(
             p["mix"], h, n_heads=cfg.n_heads, head_dim=cfg.hd, quant=quant,
             impl=cfg.wkv_impl, wkv_chunk=cfg.wkv_chunk, mesh=mesh,
-            state=state["tm"] if state is not None else None, tap=tap)
+            state=state["tm"] if state is not None else None, tap=tap,
+            backend=backend)
         new_state = {"tm": tm_state}
     elif kind == "rglru":
         out, rec_state = rglru_block(
             p["mix"], h, quant=quant, mesh=mesh,
-            state=state["rec"] if state is not None else None, tap=tap)
+            state=state["rec"] if state is not None else None, tap=tap,
+            backend=backend)
         new_state = {"rec": rec_state}
     else:
         raise ValueError(kind)
@@ -216,7 +221,7 @@ def apply_layer(
         outx, _ = attention_block(
             p["xattn"], hx, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.hd, quant=quant, xkv=enc_out, use_rope=False,
-            mesh=mesh, tap=tap)
+            mesh=mesh, tap=tap, backend=backend)
         x = x + outx
 
     h2 = apply_norm(p["ln2"], x, cfg.norm)
@@ -225,20 +230,21 @@ def apply_layer(
             y = moe_ffn_sharded(p["ffn"], h2, mesh=mesh,
                                 n_experts=cfg.n_experts, top_k=cfg.top_k,
                                 capacity_factor=cfg.capacity_factor,
-                                quant=quant)
+                                quant=quant, backend=backend)
         else:
             y = moe_ffn(p["ffn"], h2, n_experts=cfg.n_experts,
                         top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
-                        quant=quant, tap=tap)
+                        quant=quant, tap=tap, backend=backend)
     elif cfg.mlp == "rwkv_cm":
         y, cm_state = rwkv_channel_mix(
             p["ffn"], h2, quant=quant, mesh=mesh,
             state=state["cm"] if (state is not None and "cm" in state)
-            else None, tap=tap)
+            else None, tap=tap, backend=backend)
         if state is not None:
             new_state["cm"] = cm_state
     else:
-        y = apply_mlp(p["ffn"], h2, kind=cfg.mlp, quant=quant, tap=tap)
+        y = apply_mlp(p["ffn"], h2, kind=cfg.mlp, quant=quant, tap=tap,
+                      backend=backend)
     x = x + y
     # RWKV layers always carry channel-mix shift state in decode.
     if kind == "rwkv" and state is not None and "cm" not in new_state:
@@ -269,13 +275,15 @@ def init_unit_state(cfg: ModelConfig, batch: int, cache_len: int) -> Params:
 
 
 def apply_unit(p: Params, x, *, cfg: ModelConfig, mesh=None, state=None,
-               pos=0, enc_out=None, causal=True, tap: list | None = None):
+               pos=0, enc_out=None, causal=True, tap: list | None = None,
+               backend=None):
     new_state = {}
     for i, kind in enumerate(cfg.block_pattern):
         x, s = apply_layer(
             p[str(i)], x, cfg=cfg, kind=kind, mesh=mesh,
             state=state[str(i)] if state is not None else None,
-            pos=pos, enc_out=enc_out, causal=causal, tap=tap)
+            pos=pos, enc_out=enc_out, causal=causal, tap=tap,
+            backend=backend)
         new_state[str(i)] = s
     return x, new_state
 
@@ -367,7 +375,7 @@ def _remat(fn, cfg: ModelConfig):
 
 
 def _scan_units(params_units, x, *, cfg: ModelConfig, mesh, pos, enc_out,
-                causal, tap: list | None = None):
+                causal, tap: list | None = None, backend=None):
     if params_units is None:
         return x
 
@@ -375,7 +383,7 @@ def _scan_units(params_units, x, *, cfg: ModelConfig, mesh, pos, enc_out,
         for i in range(len(params_units)):
             x, _ = apply_unit(params_units[f"u{i}"], x, cfg=cfg, mesh=mesh,
                               pos=pos, enc_out=enc_out, causal=causal,
-                              tap=tap)
+                              tap=tap, backend=backend)
         return x
 
     # The scan body traces, so the capture tap cannot see its linears —
@@ -383,7 +391,7 @@ def _scan_units(params_units, x, *, cfg: ModelConfig, mesh, pos, enc_out,
     # per-unit eager passes instead.
     def body(carry, unit_p):
         y, _ = apply_unit(unit_p, carry, cfg=cfg, mesh=mesh, pos=pos,
-                          enc_out=enc_out, causal=causal)
+                          enc_out=enc_out, causal=causal, backend=backend)
         return y, ()
 
     body = _remat(body, cfg)
@@ -410,23 +418,37 @@ def embed_inputs(p: Params, cfg: ModelConfig, tokens: jax.Array | None,
 
 
 def encode(p: Params, cfg: ModelConfig, enc_embeds: jax.Array,
-           mesh=None) -> jax.Array:
+           mesh=None, backend=None) -> jax.Array:
     """Encoder stack over precomputed frame embeddings (audio stub)."""
     x = enc_embeds.astype(cfg.jdtype)
     enc_cfg = dataclasses.replace(cfg, encdec=False, scan_layers=True)
     x = _scan_units(p["encoder"]["units"], x, cfg=enc_cfg, mesh=mesh, pos=0,
-                    enc_out=None, causal=False)
+                    enc_out=None, causal=False, backend=backend)
     return apply_norm(p["encoder"]["final_norm"], x, cfg.norm)
 
 
 def logits_from_hidden(p: Params, cfg: ModelConfig, x: jax.Array,
-                       mesh=None):
+                       mesh=None, backend=None):
+    from repro.core import (DeployedQuantState, QuantState, quant_dense,
+                            tied_head_weight)
     from .common import act_spec, shard_hint
     x = apply_norm(p["final_norm"], x, cfg.norm)
     if cfg.tie_embeddings:
-        logits = jnp.einsum("bsd,vd->bsv", x, p["embed"]["table"])
+        # The tied head GEMM is quantizable like any projection: a
+        # ``qp_head`` state appears after ``calibrate_model`` (fake-quant
+        # QAT view over ``tied_head_weight(table)``) and
+        # ``export_quantized`` deploys it as INT8 codes + shift exponents
+        # routed through the exec backend.
+        qp_head = p["embed"].get("qp_head")
+        if isinstance(qp_head, DeployedQuantState):
+            logits = quant_dense(x, None, qp_head, backend=backend)
+        elif isinstance(qp_head, QuantState):
+            logits = quant_dense(x, tied_head_weight(p["embed"]["table"]),
+                                 qp_head)
+        else:
+            logits = jnp.einsum("bsd,vd->bsv", x, p["embed"]["table"])
     else:
-        logits = dense(p["head"], x, None)
+        logits = dense(p["head"], x, None, backend=backend)
     return shard_hint(logits, act_spec(mesh, x.shape[0], feat=cfg.vocab))
 
 
@@ -440,6 +462,7 @@ def forward(
     mesh=None,
     pos: jax.Array | int = 0,
     tap: list | None = None,
+    backend=None,
 ) -> jax.Array:
     """Training / one-shot prefill forward; returns logits [B, S_out, V].
 
@@ -448,19 +471,21 @@ def forward(
     ``tap``        — calibration capture list (reaches every linear only
     when ``cfg.scan_layers`` is False; ``calibrate_model`` handles the
     scanned case by per-unit eager passes).
+    ``backend``    — integer execution backend for deployed params
+    (``repro.exec``: "oracle" | "pallas" | "auto").
     """
     enc_out = None
     if cfg.encdec:
         assert enc_embeds is not None, "enc-dec model needs enc_embeds"
-        enc_out = encode(p, cfg, enc_embeds, mesh=mesh)
+        enc_out = encode(p, cfg, enc_embeds, mesh=mesh, backend=backend)
     x = embed_inputs(p, cfg, tokens, embeds)
     x = _scan_units(p["units"], x, cfg=cfg, mesh=mesh, pos=pos,
-                    enc_out=enc_out, causal=True, tap=tap)
+                    enc_out=enc_out, causal=True, tap=tap, backend=backend)
     for i in range(cfg.n_rem):
         x, _ = apply_layer(p["rem"][str(i)], x, cfg=cfg,
                            kind=cfg.block_pattern[i], mesh=mesh, pos=pos,
-                           enc_out=enc_out, tap=tap)
-    return logits_from_hidden(p, cfg, x, mesh)
+                           enc_out=enc_out, tap=tap, backend=backend)
+    return logits_from_hidden(p, cfg, x, mesh, backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -523,9 +548,12 @@ def decode_step(
     *,
     enc_out: jax.Array | None = None,
     mesh=None,
+    backend=None,
 ):
     """One decode step.  token: [B, 1] int32; pos: scalar int32 (position of
-    this token).  Returns (logits [B, 1, V], new_state)."""
+    this token).  Returns (logits [B, 1, V], new_state).  ``backend``
+    selects the integer execution backend for deployed params — the
+    decode hot loop runs the Pallas kernel when it resolves to "pallas"."""
     x = jnp.take(p["embed"]["table"], token, axis=0)
 
     new_state = dict(state)
@@ -534,7 +562,8 @@ def decode_step(
             def body(carry, xs):
                 unit_p, unit_s = xs
                 y, s = apply_unit(unit_p, carry, cfg=cfg, mesh=mesh,
-                                  state=unit_s, pos=pos, enc_out=enc_out)
+                                  state=unit_s, pos=pos, enc_out=enc_out,
+                                  backend=backend)
                 return y, s
 
             x, new_units = jax.lax.scan(body, x, (p["units"], state["units"]))
@@ -544,15 +573,16 @@ def decode_step(
             for i in range(cfg.n_units):
                 x, s = apply_unit(p["units"][f"u{i}"], x, cfg=cfg, mesh=mesh,
                                   state=state["units"][f"u{i}"], pos=pos,
-                                  enc_out=enc_out)
+                                  enc_out=enc_out, backend=backend)
                 new_units[f"u{i}"] = s
             new_state["units"] = new_units
     for i in range(cfg.n_rem):
         x, s = apply_layer(p["rem"][str(i)], x, cfg=cfg,
                            kind=cfg.block_pattern[i], mesh=mesh,
-                           state=state[f"rem{i}"], pos=pos, enc_out=enc_out)
+                           state=state[f"rem{i}"], pos=pos, enc_out=enc_out,
+                           backend=backend)
         new_state[f"rem{i}"] = s
-    logits = logits_from_hidden(p, cfg, x, mesh)
+    logits = logits_from_hidden(p, cfg, x, mesh, backend=backend)
     return logits, new_state
 
 

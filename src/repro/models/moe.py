@@ -29,7 +29,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import QuantConfig, QuantState, TapRecord, quant_dense
+from repro.core import (
+    DeployedQuantState,
+    QuantConfig,
+    QuantState,
+    TapRecord,
+    quant_dense,
+)
 from repro.quant.policy import resolve_quant
 from .common import Params, dense, init_linear, linear_specs
 
@@ -73,8 +79,16 @@ def moe_specs(quant=None, name: str = "") -> Params:
     return s
 
 
-def _expert_gemm(x, w, qp, quant):
-    """x: [E, C, K] @ w: [E, K, N] -> [E, C, N], optionally quantized."""
+def _expert_gemm(x, w, qp, quant, backend=None):
+    """x: [E, C, K] @ w: [E, K, N] -> [E, C, N], optionally quantized.
+
+    A ``DeployedQuantState`` ``qp`` carries stacked per-expert codes and
+    exponent banks (``w`` is dropped at export) — the GEMMs run through
+    the ``repro.exec`` backend registry like every other deployed linear.
+    """
+    if isinstance(qp, DeployedQuantState):
+        from repro.exec import execute_expert_gemm
+        return execute_expert_gemm(qp, x, backend=backend)
     if qp is None or (not isinstance(qp, QuantState)
                       and (quant is None or not quant.enabled)):
         return jnp.einsum("eck,ekn->ecn", x, w.astype(x.dtype))
@@ -90,7 +104,7 @@ def _moe_tap(tap, qp, x2d, w):
     Capacity-padded dispatch slots are all-zero rows; they are masked out
     at combine time and must not bias the activation scale low, so only
     occupied rows are captured (eager-only, dynamic shapes are fine)."""
-    if (tap is not None and isinstance(qp, QuantState)
+    if (tap is not None and w is not None and isinstance(qp, QuantState)
             and not isinstance(x2d, jax.core.Tracer)):
         live = x2d[jnp.any(x2d != 0, axis=-1)]
         if live.shape[0] == 0:
@@ -104,7 +118,7 @@ def moe_ffn(p: Params, x: jax.Array, *, n_experts: int, top_k: int,
             quant=None,
             expert_offset: int = 0, n_local_experts: int | None = None,
             axis_name: str | None = None,
-            tap: list | None = None) -> jax.Array:
+            tap: list | None = None, backend=None) -> jax.Array:
     """Top-k MoE FFN over local experts [expert_offset, +n_local).
 
     x: [B, S, d].  When ``axis_name`` is given the result is psum'd over
@@ -144,14 +158,14 @@ def moe_ffn(p: Params, x: jax.Array, *, n_experts: int, top_k: int,
     h = buf[:-1].reshape(E_loc, cap, d)
 
     # --- expert computation (swiglu) ---
-    _moe_tap(tap, p.get("qp_wg"), h.reshape(-1, d), p["wg"])
-    _moe_tap(tap, p.get("qp_wi"), h.reshape(-1, d), p["wi"])
-    a = _expert_gemm(h, p["wg"], p.get("qp_wg"), quant)
-    b = _expert_gemm(h, p["wi"], p.get("qp_wi"), quant)
+    _moe_tap(tap, p.get("qp_wg"), h.reshape(-1, d), p.get("wg"))
+    _moe_tap(tap, p.get("qp_wi"), h.reshape(-1, d), p.get("wi"))
+    a = _expert_gemm(h, p.get("wg"), p.get("qp_wg"), quant, backend)
+    b = _expert_gemm(h, p.get("wi"), p.get("qp_wi"), quant, backend)
     hidden = jax.nn.silu(a) * b
     _moe_tap(tap, p.get("qp_wo"), hidden.reshape(-1, hidden.shape[-1]),
-             p["wo"])
-    y_exp = _expert_gemm(hidden, p["wo"], p.get("qp_wo"), quant)
+             p.get("wo"))
+    y_exp = _expert_gemm(hidden, p.get("wo"), p.get("qp_wo"), quant, backend)
 
     # --- combine back to tokens ---
     y_flat = jnp.concatenate(
@@ -167,25 +181,32 @@ def moe_ffn(p: Params, x: jax.Array, *, n_experts: int, top_k: int,
 def moe_ffn_sharded(p: Params, x: jax.Array, *, mesh, n_experts: int,
                     top_k: int, capacity_factor: float = 1.25,
                     quant: QuantConfig | None = None,
-                    data_axes=("pod", "data"), model_axis="model"):
+                    data_axes=("pod", "data"), model_axis="model",
+                    backend=None):
     """EP via shard_map: tokens sharded over data axes, experts over model.
 
     Falls back to the pure version when mesh is None (smoke tests).
+    Deployed expert banks (``qp_*`` as stacked ``DeployedQuantState``)
+    shard their leading expert axis over ``model`` like the float experts.
     """
     if mesh is None:
         return moe_ffn(p, x, n_experts=n_experts, top_k=top_k,
-                       capacity_factor=capacity_factor, quant=quant)
+                       capacity_factor=capacity_factor, quant=quant,
+                       backend=backend)
 
     data_axes = tuple(a for a in data_axes if a in mesh.axis_names)
     m = mesh.shape[model_axis]
     assert n_experts % m == 0, (n_experts, m)
     e_loc = n_experts // m
 
-    expert_spec = P(model_axis)
+    def _expert_param_spec(k, v):
+        if k in ("wi", "wg", "wo") or isinstance(v, DeployedQuantState):
+            return jax.tree.map(lambda _: P(model_axis), v)
+        return jax.tree.map(lambda _: P(), v)
+
     in_specs = (
         jax.tree.map(lambda _: P(), p["router"]),
-        {k: (P(model_axis) if k in ("wi", "wg", "wo")
-             else jax.tree.map(lambda _: P(), v))
+        {k: _expert_param_spec(k, v)
          for k, v in p.items() if k != "router"},
         P(data_axes, None, None),
     )
@@ -197,7 +218,7 @@ def moe_ffn_sharded(p: Params, x: jax.Array, *, mesh, n_experts: int,
         return moe_ffn(pl, xl, n_experts=n_experts, top_k=top_k,
                        capacity_factor=capacity_factor, quant=quant,
                        expert_offset=idx * e_loc, n_local_experts=e_loc,
-                       axis_name=model_axis)
+                       axis_name=model_axis, backend=backend)
 
     from repro.dist import shard_map
     f = shard_map(

@@ -97,7 +97,7 @@ def _rglru_scan(x: jax.Array, a: jax.Array, h0: jax.Array):
 def rglru_block(p: Params, x: jax.Array, *,
                 quant=None,
                 state: Params | None = None, mesh=None,
-                tap: list | None = None):
+                tap: list | None = None, backend=None):
     """Full recurrent block.  state = {"h": [B, d_rnn] fp32,
     "conv": [B, 3, d_rnn]} or None (fresh)."""
     from .common import act_spec, act_spec_seq, shard_hint
@@ -112,9 +112,9 @@ def rglru_block(p: Params, x: jax.Array, *,
         rnn_spec = act_spec_seq(mesh, B, S)
     else:
         rnn_spec = act_spec(mesh, B, feat=d_rnn)
-    y = jax.nn.gelu(dense(p["wy"], x, quant, tap=tap))
+    y = jax.nn.gelu(dense(p["wy"], x, quant, tap=tap, backend=backend))
     y = shard_hint(y, rnn_spec)
-    xr = dense(p["wx"], x, quant, tap=tap)
+    xr = dense(p["wx"], x, quant, tap=tap, backend=backend)
     conv_state = state["conv"] if state is not None else None
     xr, new_conv = _causal_conv1d(xr, p["conv_w"], p["conv_b"], conv_state)
     # Keep the whole recurrence sharded on the (diagonal) channel dim —
@@ -140,7 +140,8 @@ def rglru_block(p: Params, x: jax.Array, *,
     else:
         h = _rglru_scan(gated, a, h0)
 
-    out = dense(p["wo"], (h.astype(x.dtype) * y), quant, tap=tap)
+    out = dense(p["wo"], (h.astype(x.dtype) * y), quant, tap=tap,
+                backend=backend)
     new_state = {"h": h[:, -1], "conv": new_conv}
     return out, new_state
 

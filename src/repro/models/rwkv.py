@@ -215,7 +215,7 @@ def _wkv_chunked(r, k, v, log_w, u, state, chunk: int = 32,
 def rwkv_time_mix(p: Params, x: jax.Array, *, n_heads: int, head_dim: int,
                   quant=None, impl: str = "scan",
                   state: Params | None = None, wkv_chunk: int = 32,
-                  mesh=None, tap: list | None = None):
+                  mesh=None, tap: list | None = None, backend=None):
     """RWKV6 time mixing.  state (decode / carry) = {"shift": [B, 1, d],
     "wkv": [B, H, hd, hd]}; pass None for fresh (training) state."""
     from .common import act_spec, act_spec_seq, shard_hint
@@ -235,13 +235,16 @@ def rwkv_time_mix(p: Params, x: jax.Array, *, n_heads: int, head_dim: int,
     xr, xw, xk, xv, xg = mixed
 
     hspec = act_spec(mesh, B, heads=H)
-    r = shard_hint(dense(p["wr"], xr, quant, tap=tap).reshape(B, S, H, hd),
+    r = shard_hint(dense(p["wr"], xr, quant, tap=tap,
+                         backend=backend).reshape(B, S, H, hd),
                    hspec).astype(jnp.float32)
-    k = shard_hint(dense(p["wk"], xk, quant, tap=tap).reshape(B, S, H, hd),
+    k = shard_hint(dense(p["wk"], xk, quant, tap=tap,
+                         backend=backend).reshape(B, S, H, hd),
                    hspec).astype(jnp.float32)
-    v = shard_hint(dense(p["wv"], xv, quant, tap=tap).reshape(B, S, H, hd),
+    v = shard_hint(dense(p["wv"], xv, quant, tap=tap,
+                         backend=backend).reshape(B, S, H, hd),
                    hspec).astype(jnp.float32)
-    g = dense(p["wg"], xg, quant, tap=tap)
+    g = dense(p["wg"], xg, quant, tap=tap, backend=backend)
     log_w = _decay(p, xw).reshape(B, S, H, hd)
     # Clamp so |cumsum(log_w)| <= wkv_chunk * 2 < 80: the chunked form's
     # exp(+/-L) factors then never leave fp32 range.  (Decay floor of
@@ -272,7 +275,7 @@ def rwkv_time_mix(p: Params, x: jax.Array, *, n_heads: int, head_dim: int,
         + p["ln_out"]["bias"].astype(jnp.float32)
 
     out = dense(p["wo"], shard_hint(yf.astype(x.dtype) * jax.nn.silu(g),
-                                    sspec), quant, tap=tap)
+                                    sspec), quant, tap=tap, backend=backend)
     new_state = {"shift": x[:, -1:], "wkv": s_new}
     return out, new_state
 
@@ -280,7 +283,7 @@ def rwkv_time_mix(p: Params, x: jax.Array, *, n_heads: int, head_dim: int,
 def rwkv_channel_mix(p: Params, x: jax.Array, *,
                      quant=None,
                      state: Params | None = None, mesh=None,
-                     tap: list | None = None):
+                     tap: list | None = None, backend=None):
     """Squared-ReLU channel mix.  state = {"shift": [B, 1, d]}."""
     from .common import act_spec_seq, shard_hint
     B, S = x.shape[:2]
@@ -290,9 +293,10 @@ def rwkv_channel_mix(p: Params, x: jax.Array, *,
     sx = xx - x
     xk = shard_hint(x + sx * p["mu"][1][None, None], sspec)
     xr = shard_hint(x + sx * p["mu"][0][None, None], sspec)
-    kk = jnp.square(jax.nn.relu(dense(p["wk"], xk, quant, tap=tap)))
+    kk = jnp.square(jax.nn.relu(dense(p["wk"], xk, quant, tap=tap,
+                                      backend=backend)))
     out = (jax.nn.sigmoid(dense(p["wr"], xr, None))
-           * dense(p["wv"], kk, quant, tap=tap))
+           * dense(p["wv"], kk, quant, tap=tap, backend=backend))
     return out, {"shift": x[:, -1:]}
 
 

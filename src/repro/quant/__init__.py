@@ -7,7 +7,7 @@ in the model zoo / kernels, which themselves import ``repro.quant.policy``.
 from .policy import QuantPolicy, QuantRule, resolve_quant
 
 _QAT = ("SweepResult", "calibrate_model", "distill_loss",
-        "make_distill_loss_fn", "quant_variants")
+        "make_distill_loss_fn", "policy_presets", "quant_variants")
 _EXPORT = ("export_quantized", "snap_params_po2")
 
 __all__ = ["QuantPolicy", "QuantRule", "resolve_quant", *_QAT, *_EXPORT]

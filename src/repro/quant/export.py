@@ -22,9 +22,15 @@ of the largest PSUM scale per quantization step, see
 ``tests/test_system.py::test_kernel_agrees_with_fakequant_reference``).
 
 Scan-stacked linears (leading ``n_units`` axis) are exported per unit via
-``vmap`` and stay scan-compatible.  MoE expert tensors keep their
-fake-quant state (per-expert integer export is future work — the shared
-``QuantState`` would need per-expert exponent banks).
+``vmap`` and stay scan-compatible.  MoE expert tensors export the same
+way over the expert axis: ``{"wi": [E, K, N], "qp_wi": QuantState}``
+becomes a stacked ``DeployedQuantState`` whose data leaves carry a
+leading expert axis — per-expert INT8 codes and per-expert exponent
+banks — executed by ``repro.exec.execute_expert_gemm``.  The
+tied-embedding head (``{"table", "qp_head"}`` after ``calibrate_model``)
+exports its transposed table as INT8 codes + shift exponents while the
+float table stays for the input lookup; ``models.model.logits_from_hidden``
+routes the logits GEMM through the exec backend.
 """
 from __future__ import annotations
 
@@ -38,6 +44,7 @@ from repro.core import (
     QuantState,
     effective_n_p,
     po2_quantize_codes,
+    tied_head_weight,
 )
 
 
@@ -91,41 +98,62 @@ def export_quantized(params, policy=None):
     Walks the params tree for ``{"w": ..., "qp": QuantState}`` subtrees
     and replaces them with ``{"qp": DeployedQuantState}`` (the float
     weight is dropped — the codes + exponents are the deployment
-    artifact).  ``policy`` optionally overrides each layer's spec (e.g.
-    re-deploying with a different per-layer gs without re-training PSUM
-    scales is legal as long as n_p is unchanged).
+    artifact).  MoE expert containers (``{"wi": [E, K, N], "qp_wi":
+    QuantState, ...}``) export per expert: the float bank is dropped and
+    ``qp_wi`` becomes a stacked ``DeployedQuantState`` with per-expert
+    codes + exponent banks.  A tied-embedding head calibrated by
+    ``calibrate_model`` (``{"table", "qp_head"}``) exports its transposed
+    table; the float table stays for the input lookup.  ``policy``
+    optionally overrides each layer's spec (e.g. re-deploying with a
+    different per-layer gs without re-training PSUM scales is legal as
+    long as n_p is unchanged).
 
     Returns ``(deploy_params, report)`` — report maps layer name to
     {k, n, n_p, gs, mode, int8_bytes, clamped_exps}.
     """
     report: dict = {}
 
+    def apply_policy(qp: QuantState, k: int) -> QuantState:
+        if policy is None:
+            return qp
+        override = policy.resolve(qp.name)
+        if override is None or not override.enabled:
+            return qp
+        if override.psum.mode != "none":
+            if qp.ap is None:
+                raise ValueError(
+                    f"{qp.name}: export policy requests psum mode "
+                    f"{override.psum.mode!r} but the layer was "
+                    f"calibrated without PSUM scales — re-run "
+                    f"calibration with that policy first")
+            n_p = qp.ap.shape[-1]
+            eff = effective_n_p(k, override.psum.n_p)
+            if eff != n_p:
+                raise ValueError(
+                    f"{qp.name}: export policy n_p="
+                    f"{override.psum.n_p} (effective {eff} for "
+                    f"K={k}) != calibrated n_p={n_p}")
+            override = dataclasses.replace(
+                override, psum=dataclasses.replace(override.psum, n_p=eff))
+        return dataclasses.replace(qp, spec=override)
+
+    def record(dq, spec, n_clamped, name, **extra):
+        prev = report.get(name)
+        report[name] = {
+            "k": int(dq.w_codes.shape[-2]), "n": int(dq.w_codes.shape[-1]),
+            "mode": spec.psum.mode if spec else "none",
+            "gs": spec.psum.gs if spec else None,
+            "n_p": spec.psum.n_p if spec else None,
+            "int8_bytes": int(dq.w_codes.size),
+            "clamped_exps": int(jnp.sum(n_clamped)),
+            # unstacked units share pattern-position names; count them
+            "count": 1 + (prev["count"] if prev else 0),
+            **extra,
+        }
+
     def export_linear(w, qp: QuantState):
-        spec = qp.spec
         stacked = _is_stacked(qp)
-        if policy is not None:
-            override = policy.resolve(qp.name)
-            if override is not None and override.enabled:
-                if override.psum.mode != "none":
-                    if qp.ap is None:
-                        raise ValueError(
-                            f"{qp.name}: export policy requests psum mode "
-                            f"{override.psum.mode!r} but the layer was "
-                            f"calibrated without PSUM scales — re-run "
-                            f"calibration with that policy first")
-                    k = int(w.shape[1] if stacked else w.shape[0])
-                    n_p = qp.ap.shape[-1]
-                    eff = effective_n_p(k, override.psum.n_p)
-                    if eff != n_p:
-                        raise ValueError(
-                            f"{qp.name}: export policy n_p="
-                            f"{override.psum.n_p} (effective {eff} for "
-                            f"K={k}) != calibrated n_p={n_p}")
-                    override = dataclasses.replace(
-                        override,
-                        psum=dataclasses.replace(override.psum, n_p=eff))
-                qp = dataclasses.replace(qp, spec=override)
-                spec = override
+        qp = apply_policy(qp, int(w.shape[1] if stacked else w.shape[0]))
         if stacked:
             # vmap over the scan-stacked leading axis; out_dims metadata is
             # set inside _export_one from the per-unit weight shape
@@ -134,27 +162,61 @@ def export_quantized(params, policy=None):
         else:
             dq, n_clamped = _export_one(w, qp)
             n_units = 1
-        clamped = int(jnp.sum(n_clamped))
-        prev = report.get(qp.name)
-        report[qp.name] = {
-            "k": int(dq.w_codes.shape[-2]), "n": int(dq.w_codes.shape[-1]),
-            "n_units": n_units,
-            "mode": spec.psum.mode if spec else "none",
-            "gs": spec.psum.gs if spec else None,
-            "n_p": spec.psum.n_p if spec else None,
-            "int8_bytes": int(dq.w_codes.size),
-            "clamped_exps": clamped,
-            # unstacked units share pattern-position names; count them
-            "count": 1 + (prev["count"] if prev else 0),
-        }
+        record(dq, qp.spec, n_clamped, qp.name, n_units=n_units)
         return {"qp": dq}
 
+    def export_experts(w, qp: QuantState):
+        """MoE expert bank [E, K, N] (or scan-stacked [U, E, K, N]) +
+        shared state -> stacked deployed state with per-expert codes and
+        exponent banks (the shared calibrated scales replicate over E,
+        matching the fake-quant semantics of ``models.moe._expert_gemm``
+        expert-for-expert)."""
+        qp = apply_policy(qp, int(w.shape[-2]))
+        per_expert = jax.vmap(_export_one, in_axes=(0, None))
+        if _is_stacked(qp):  # [U, E, K, N] with per-unit quantizer state
+            dq, n_clamped = jax.vmap(per_expert, in_axes=(0, 0))(
+                w.astype(jnp.float32), qp)
+        else:
+            dq, n_clamped = per_expert(w.astype(jnp.float32), qp)
+        record(dq, qp.spec, n_clamped, qp.name, n_experts=int(w.shape[-3]))
+        return dq
+
+    def export_head(table, qp: QuantState):
+        """Tied-embedding head: codes for table.T ([D, V]); the float
+        table itself stays in the tree for the input embedding lookup."""
+        w = tied_head_weight(table)
+        qp = apply_policy(qp, int(w.shape[0]))
+        dq, n_clamped = _export_one(w, qp)
+        record(dq, qp.spec, n_clamped, qp.name, tied_head=True)
+        return dq
+
     def walk(tree):
-        if isinstance(tree, dict):
-            if "w" in tree and isinstance(tree.get("qp"), QuantState):
-                return export_linear(tree["w"], tree["qp"])
-            return {k: walk(v) for k, v in tree.items()}
-        return tree
+        if not isinstance(tree, dict):
+            return tree
+        if "w" in tree and isinstance(tree.get("qp"), QuantState):
+            return export_linear(tree["w"], tree["qp"])
+        if "table" in tree and isinstance(tree.get("qp_head"), QuantState):
+            out = {k: walk(v) for k, v in tree.items() if k != "qp_head"}
+            out["qp_head"] = export_head(tree["table"], tree["qp_head"])
+            return out
+        # Expert banks: [E, K, N] floats next to a shared QuantState, or
+        # scan-stacked [U, E, K, N] next to a unit-stacked QuantState.
+        experts = [k[3:] for k in tree
+                   if k.startswith("qp_") and k[3:] in tree
+                   and isinstance(tree[k], QuantState)
+                   and getattr(tree[k[3:]], "ndim", 0)
+                   == (4 if _is_stacked(tree[k]) else 3)]
+        if experts:
+            out = {}
+            for k, v in tree.items():
+                if k in experts:
+                    continue  # float expert bank dropped from deployment
+                if k.startswith("qp_") and k[3:] in experts:
+                    out[k] = export_experts(tree[k[3:]], v)
+                else:
+                    out[k] = walk(v)
+            return out
+        return {k: walk(v) for k, v in tree.items()}
 
     return walk(params), report
 

@@ -26,7 +26,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import QuantState, calibrate_dense
+from repro.core import QuantState, calibrate_dense, quant_params_init, \
+    tied_head_weight
 from repro.models.config import ModelConfig
 from repro.models.model import (
     apply_layer,
@@ -153,6 +154,23 @@ def calibrate_model(params, cfg: ModelConfig, batch: dict,
                                kind=cfg.block_pattern[i], pos=0,
                                enc_out=enc_out)
         new_params["rem"] = new_rem
+
+    # Tied-embedding head: the logits GEMM (x @ table.T) is a projection
+    # like any other — give it a quantizer state (policy name "head") and
+    # calibrate it on the final-norm hidden states so export can emit its
+    # INT8 codes + shift exponents (ROADMAP: tied-head integer export).
+    if cfg.tie_embeddings:
+        from .policy import resolve_quant
+        resolved = resolve_quant(cfg.policy, "head")
+        if resolved is not None:
+            w2d = tied_head_weight(params["embed"]["table"])
+            xh = apply_norm(params["final_norm"], x, cfg.norm)
+            qp0 = params["embed"].get("qp_head")
+            if not isinstance(qp0, QuantState):
+                qp0 = quant_params_init(w2d, resolved, name="head")
+            qp = calibrate_dense(
+                qp0, xh.reshape(-1, xh.shape[-1])[:sample_tokens], w2d)
+            new_params["embed"] = {**params["embed"], "qp_head": qp}
     return new_params
 
 
@@ -214,3 +232,34 @@ def quant_variants(gs_values=(1, 2, 3, 4), n_p: int = 8) -> dict:
             QuantConfig.apsq(gs=gs, n_p=n_p))
     out["psq"] = QuantPolicy.uniform(QuantConfig.psq(n_p=n_p))
     return out
+
+
+def policy_presets() -> dict:
+    """Named *heterogeneous* per-layer policies for roofline/dryrun sweeps.
+
+    These are the co-exploration points the RAE's reconfigurability
+    enables (different (gs, n_p) per layer class); ``launch/dryrun.py``
+    surfaces them via ``--quant-policy`` so roofline cells can compare
+    heterogeneous policies against the uniform presets.
+    """
+    from repro.core import QuantConfig
+    apsq = QuantConfig.apsq
+    return {
+        # attention projections tight (small gs), FFN loose (bigger gs)
+        "mix2_ffn4": QuantPolicy.of(
+            ("*.mix.*", apsq(gs=2, n_p=4)),
+            ("*.ffn.*", apsq(gs=4, n_p=8)),
+            default=QuantConfig.w8a8()),
+        # PSUM-quantize only the FFN (attention stays plain W8A8)
+        "ffn_only": QuantPolicy.of(
+            ("*.ffn.*", apsq(gs=2, n_p=8)),
+            default=QuantConfig.w8a8()),
+        # aggressive everywhere incl. remainder layers, fine K tiling
+        "aggressive": QuantPolicy.of(
+            ("rem.*", apsq(gs=1, n_p=16)),
+            ("*", apsq(gs=2, n_p=16))),
+        # encoder quantized harder than decoder (encdec archs)
+        "enc_heavy": QuantPolicy.of(
+            ("encoder.*", apsq(gs=1, n_p=8)),
+            ("*", apsq(gs=4, n_p=4))),
+    }

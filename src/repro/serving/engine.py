@@ -13,6 +13,20 @@ Production pattern (vLLM-style, TPU-adapted):
   * optional INT8 KV cache helpers (beyond-paper: APSQ-style PO2 scales
     applied to cache pages — ``quantize_kv``/``dequantize_kv``).
 
+Integer serving (the calibrate -> export -> kernel-serving flow):
+
+    params = calibrate_model(qat_params, cfg, batch)     # capture-based
+    eng = ServingEngine.from_exported(params, cfg, backend="auto")
+    eng.run([Request(uid=0, tokens=prompt)])
+
+``from_exported`` exports every quantized linear to INT8 codes + PO2
+shift exponents and the engine executes them through the ``repro.exec``
+backend registry: ``backend="auto"`` (default) runs the real Pallas
+APSQ kernel on TPU and the bit-identical jnp oracle elsewhere;
+``backend="pallas"`` pins the kernel (interpret mode off-TPU — what CI
+runs); ``backend="oracle"`` pins the reference semantics.  Greedy
+decodes are token-for-token identical across backends.
+
 The engine is host-driven (python around two jit'd functions) — the
 launcher's ``serve.py`` runs it; the dry-run lowers ``serve_step`` from
 ``repro.launch.dryrun`` directly.
@@ -76,7 +90,8 @@ class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
                  cache_len: int = 1024, prefill_chunk: int = 64,
                  mesh=None, greedy: bool = True, temperature: float = 1.0,
-                 seed: int = 0):
+                 seed: int = 0, backend="auto"):
+        from repro.exec import get_backend
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
@@ -86,6 +101,12 @@ class ServingEngine:
         self.greedy = greedy
         self.temperature = temperature
         self.rng = jax.random.PRNGKey(seed)
+        # Integer execution backend for deployed params (repro.exec):
+        # "auto" (default) serves the Pallas kernel on TPU and the jnp
+        # oracle elsewhere; "pallas"/"oracle" (or an ExecBackend instance,
+        # e.g. PallasBackend(interpret=True)) pin one explicitly.  Float /
+        # fake-quant params ignore it.
+        self.backend = get_backend(backend)
 
         self.state = init_decode_state(cfg, max_batch, cache_len)
         self.pos = np.zeros(max_batch, np.int32)      # next position per slot
@@ -98,7 +119,9 @@ class ServingEngine:
         """Serve the integer deployment path: export the calibrated QAT
         params (INT8 weight codes + PO2 shift exponents per layer, see
         ``repro.quant.export``) and run every projection GEMM through the
-        ``kernels/apsq_matmul`` integer semantics inside decode."""
+        ``kernels/apsq_matmul`` integer semantics inside decode.  The
+        ``backend=`` knob picks the executor: ``auto`` (kernel on TPU,
+        oracle elsewhere), ``pallas``, or ``oracle``."""
         from repro.quant.export import export_quantized
         deploy, _ = export_quantized(params, policy)
         return cls(deploy, cfg, **kw)
@@ -117,7 +140,7 @@ class ServingEngine:
             st, lg = carry
             tok, pos = tok_pos
             lg2, st2 = decode_step(params, cfg, st, tok[None, None], pos,
-                                   mesh=self.mesh)
+                                   mesh=self.mesh, backend=self.backend)
             valid = pos < length
             st = jax.tree.map(lambda a, b: jnp.where(valid, b, a), st, st2)
             lg = jnp.where(pos == length - 1, lg2[:, -1].astype(lg.dtype), lg)
@@ -144,7 +167,7 @@ class ServingEngine:
             st1 = jax.tree.map(lambda a, ax: jnp.expand_dims(a, ax),
                                st, axes)
             lg, st2 = decode_step(params, cfg, st1, tok[None], ps,
-                                  mesh=self.mesh)
+                                  mesh=self.mesh, backend=self.backend)
             st2 = jax.tree.map(lambda a, ax: jnp.squeeze(a, ax), st2, axes)
             return lg[0, -1], st2
 

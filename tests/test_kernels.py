@@ -128,3 +128,69 @@ def test_accumulator_working_set():
     assert b["apsq_banks"] * 4 == b["baseline_int32"]  # beta 4 -> 1
     b4 = accumulator_vmem_bytes(128, 128, gs=4)
     assert b4["apsq_banks"] == b4["baseline_int32"]  # parity at gs=4
+
+
+# ---------------------------------------------------------------------------
+# Kernel-vs-oracle parity grid: serving shapes, ragged K, exponent layouts
+# ---------------------------------------------------------------------------
+
+# (m, k) cells: decode M=1, small/batched prefill M, ragged K (K % n_p != 0
+# for some n_p below -> remainder PSUM group), and an unaligned N.
+PARITY_SHAPES = [
+    (1, 64, 32),     # decode: one token against the cache
+    (1, 37, 16),     # decode + ragged K for every n_p > 1
+    (8, 40, 24),     # small batch, ragged for n_p in (3, 16)
+    (64, 96, 48),    # batched prefill
+    (130, 100, 130), # prefill crossing block_m/block_n boundaries, ragged
+]
+
+
+@pytest.mark.parametrize("m,k,n", PARITY_SHAPES)
+@pytest.mark.parametrize("gs", [1, 2, 4])
+@pytest.mark.parametrize("n_p", [1, 3, 4, 16])
+def test_parity_grid_kernel_vs_oracle(m, k, n, gs, n_p):
+    """The full serving grid: every (shape, gs, n_p) cell bit-exact,
+    including ragged K handled by the zero-contribution remainder group."""
+    key = jax.random.PRNGKey(m * 7919 + k * 31 + n_p * 7 + gs)
+    x = _codes(key, (m, k))
+    w = _codes(jax.random.fold_in(key, 1), (k, n))
+    exps = choose_exps(x, w, n_p=n_p, gs=gs)
+    ref = apsq_matmul_ref(x, w, exps, n_p=n_p, gs=gs)
+    out = apsq_matmul_int8(x, w, exps, gs=gs, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+@pytest.mark.parametrize("m,k,n,n_p,gs", [(8, 32, 16, 4, 2),
+                                          (1, 48, 16, 4, 3),
+                                          (16, 64, 130, 8, 2),
+                                          (4, 30, 20, 4, 2)])
+def test_parity_per_column_exponents(m, k, n, n_p, gs):
+    """[n_p, N] exponents (per-channel weight-scale export layout): the
+    kernel's VMEM exponent block must match the broadcasting oracle."""
+    key = jax.random.PRNGKey(m + k + n)
+    x = _codes(key, (m, k))
+    w = _codes(jax.random.fold_in(key, 1), (k, n))
+    base = choose_exps(x, w, n_p=n_p, gs=gs)
+    exps = base[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :] % 3
+    ref = apsq_matmul_ref(x, w, exps, n_p=n_p, gs=gs)
+    out = apsq_matmul_int8(x, w, exps, gs=gs, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_ragged_k_equals_explicitly_padded():
+    """Ragged K == running the kernel on zero-padded codes (the remainder
+    group contributes nothing)."""
+    from repro.kernels.apsq_matmul import pad_ragged_k
+    key = jax.random.PRNGKey(13)
+    x = _codes(key, (8, 45))
+    w = _codes(jax.random.fold_in(key, 1), (45, 16))
+    n_p, gs = 4, 2
+    exps = choose_exps(x, w, n_p=n_p, gs=gs)
+    xp, wp = pad_ragged_k(x, w, n_p)
+    assert xp.shape[1] == 48 and wp.shape[0] == 48
+    ragged = apsq_matmul_int8(x, w, exps, gs=gs, interpret=True)
+    padded = apsq_matmul_int8(xp, wp, exps, gs=gs, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ragged), np.asarray(padded))
+    base = baseline_matmul_int8(x, w, n_p=n_p, interpret=True)
+    np.testing.assert_array_equal(np.asarray(base),
+                                  np.asarray(baseline_matmul_ref(x, w)))
