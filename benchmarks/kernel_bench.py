@@ -14,8 +14,16 @@ not a TPU signal; what we measure and report:
 
 ``--smoke`` (the CI kernel-backend job) runs the correctness sweep and
 the backend parity section only, at reduced shapes.
+
+``--json BENCH_kernel.json`` additionally emits every measurement as a
+machine-readable record (throughput + parity per shape, plus jax/backend
+metadata) so the perf trajectory is tracked across PRs instead of living
+only in CI logs.
 """
 import argparse
+import json
+import platform
+import time
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +43,7 @@ from repro.quant import export_quantized
 from .common import timed
 
 
-def run_correctness(print_fn=print):
+def run_correctness(print_fn=print, records: list | None = None):
     key = jax.random.PRNGKey(0)
     cells = [(32, 128, 64, 8, 2), (64, 256, 128, 4, 4),
              (16, 64, 32, 8, 1), (128, 512, 128, 16, 3),
@@ -49,13 +57,19 @@ def run_correctness(print_fn=print):
         exps = choose_exps(x, w, n_p=n_p, gs=gs)
         ref = apsq_matmul_ref(x, w, exps, n_p=n_p, gs=gs)
         out = apsq_matmul_int8(x, w, exps, gs=gs, interpret=True)
-        assert np.array_equal(np.asarray(ref), np.asarray(out))
+        equal = bool(np.array_equal(np.asarray(ref), np.asarray(out)))
+        assert equal
         ok += 1
+        if records is not None:
+            records.append({"section": "correctness", "m": m, "k": k,
+                            "n": n, "n_p": n_p, "gs": gs,
+                            "bit_exact": equal})
     print_fn(f"kernel,bit_exact_cells={ok}/{len(cells)}")
     return ok
 
 
-def run_backends(print_fn=print, smoke: bool = False):
+def run_backends(print_fn=print, smoke: bool = False,
+                 records: list | None = None):
     """Oracle vs Pallas backend on one exported layer, side by side.
 
     Builds the full calibrate -> export artifact (per-channel weight
@@ -78,20 +92,30 @@ def run_backends(print_fn=print, smoke: bool = False):
         _, times, equal = backend_parity_check(
             dq, x, reps=2 if smoke else 5, warmup=1 if smoke else 2)
         all_equal &= equal
-        print_fn(f"kernel,backend,{shape_name},M={x.shape[0]},K={k},N={n},"
+        m = int(x.shape[0])
+        print_fn(f"kernel,backend,{shape_name},M={m},K={k},N={n},"
                  f"oracle_us={times['oracle']:.0f},"
                  f"pallas_us={times['pallas']:.0f},bit_equal={equal}")
+        if records is not None:
+            macs = m * k * n
+            records.append({
+                "section": "backend", "shape": shape_name,
+                "m": m, "k": k, "n": n, "gs": 2, "n_p": 8,
+                "bit_equal": bool(equal),
+                **{f"{b}_us": round(t, 1) for b, t in times.items()},
+                **{f"{b}_gmacs_per_s": round(macs / t / 1e3, 3)
+                   for b, t in times.items() if t > 0}})
     assert all_equal, "oracle and pallas backends disagree"
     return all_equal
 
 
-def run(print_fn=print, smoke: bool = False):
+def run(print_fn=print, smoke: bool = False, records: list | None = None):
     key = jax.random.PRNGKey(0)
     # 1. correctness sweep (interpret mode)
-    ok = run_correctness(print_fn)
+    ok = run_correctness(print_fn, records)
 
     # 2. execution-backend parity + throughput (the serving path)
-    run_backends(print_fn, smoke=smoke)
+    run_backends(print_fn, smoke=smoke, records=records)
 
     if smoke:
         return ok
@@ -102,6 +126,10 @@ def run(print_fn=print, smoke: bool = False):
         print_fn(f"kernel,accumulator_bytes,gs={gs},"
                  f"apsq={v['apsq_banks']},int32={v['baseline_int32']},"
                  f"saving={1 - v['apsq_banks'] / v['baseline_int32']:.2f}")
+        if records is not None:
+            records.append({"section": "accumulator_bytes", "gs": gs,
+                            "apsq_banks": v["apsq_banks"],
+                            "baseline_int32": v["baseline_int32"]})
 
     # 4. QAT-time overhead of fake-quant APSQ vs plain matmul (CPU)
     xf = jax.random.normal(key, (256, 1024))
@@ -117,6 +145,9 @@ def run(print_fn=print, smoke: bool = False):
                 jnp.mean(jnp.abs(xf @ wf)))
     print_fn(f"kernel,qat_overhead,plain_us={t0:.0f},apsq_us={t1:.0f},"
              f"x{t1 / t0:.1f},rel_err={rel:.4f}")
+    if records is not None:
+        records.append({"section": "qat_overhead", "plain_us": round(t0),
+                        "apsq_us": round(t1), "rel_err": rel})
 
     # 5. INT8 KV-cache decode attention (second kernel): accuracy vs fp32
     #    reference + the bandwidth story (decode cells are HBM-bound).
@@ -133,12 +164,38 @@ def run(print_fn=print, smoke: bool = False):
     print_fn(f"kernel,int8_kv_attention,rel_err_vs_fp32={rel:.4f},"
              f"decode32k_cache_bytes: bf16={cb['bf16']:.2e} -> "
              f"int8={cb['int8']:.2e} ({cb['int8'] / cb['bf16']:.2f}x)")
+    if records is not None:
+        records.append({"section": "int8_kv_attention",
+                        "rel_err_vs_fp32": rel,
+                        "decode32k_cache_bytes": cb})
     return ok
 
 
-if __name__ == "__main__":
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="correctness + backend parity only (CI job)")
-    args = ap.parse_args()
-    run(smoke=args.smoke)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write machine-readable records "
+                         "(e.g. BENCH_kernel.json)")
+    args = ap.parse_args(argv)
+    records: list | None = [] if args.json else None
+    run(smoke=args.smoke, records=records)
+    if args.json:
+        payload = {
+            "benchmark": "kernel_bench",
+            "smoke": bool(args.smoke),
+            "unix_time": int(time.time()),
+            "jax_version": jax.__version__,
+            "jax_backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "records": records,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"kernel,json -> {args.json} ({len(records)} records)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,6 +15,11 @@
    ``oracle`` (jnp reference), ``pallas`` (the real kernel; interpret
    mode on CPU), ``auto`` (kernel on TPU, oracle elsewhere) — and greedy
    decodes are token-for-token identical across backends.
+6. Search a policy: ``repro.search`` walks an architecture's actual GEMM
+   inventory (one layer namespace shared with the quantizer), scores
+   per-layer (gs, n_p) policies on energy x accuracy, and returns the
+   Pareto front.  Full loop:
+   ``python -m repro.search.cli --arch tinyllama-1.1b --budget-smoke``.
 """
 import jax
 import jax.numpy as jnp
@@ -116,3 +121,27 @@ for backend in ("oracle", "pallas"):
 print(f"\nkernel-served decode ({'==' if decodes['oracle'] == decodes['pallas'] else '!='} oracle): "
       f"{decodes['pallas']}")
 assert decodes["oracle"] == decodes["pallas"]
+
+# --- 6. search a policy: energy x accuracy co-exploration --------------------
+# ``repro.search.inventory`` names every GEMM of an architecture with the
+# SAME stable names the quantizer uses, so one QuantPolicy drives both the
+# analytical energy model (full-size shapes) and the fake-quant accuracy
+# proxy.  Here: score three policies on TinyLlama's real GEMM walk; the
+# CLI (see module docstring) runs the full candidate-generation + Pareto +
+# calibrate->export->pallas round-trip loop.
+from repro.configs import get_config
+from repro.search import energy_report, model_inventory
+
+cfg_full = get_config("tinyllama-1.1b")
+inv = model_inventory(cfg_full, seq_len=4096)
+print(f"\npolicy search: {len(inv)} named GEMMs on {cfg_full.name} "
+      f"(e.g. {inv[0].shape.name})")
+for pname, pol in [
+    ("uniform w8a8", QuantPolicy.uniform(QuantConfig.w8a8())),
+    ("uniform apsq(gs=2)", QuantPolicy.uniform(QuantConfig.apsq(gs=2))),
+    ("ffn-only apsq", QuantPolicy.of(("*.ffn.*", QuantConfig.apsq(gs=2)),
+                                     default=QuantConfig.w8a8())),
+]:
+    r = energy_report(cfg_full, pol, inventory=inv)
+    print(f"  {pname:20s} E={r['energy_j']:.2e} J "
+          f"(saves {r['saving']:.0%} vs INT32 PSUM)")

@@ -4,9 +4,17 @@
 #   scripts/ci.sh                 tier-1: full test suite (extra args -> pytest)
 #   scripts/ci.sh kernel-backend  interpret-mode kernel-backend job: the
 #                                 kernel-vs-oracle parity grid + exec-backend
-#                                 tests + a kernel_bench --smoke pass, so
-#                                 kernel regressions fail fast and in
+#                                 tests + a kernel_bench --smoke pass (with
+#                                 the machine-readable BENCH_kernel.json so
+#                                 the perf trajectory is tracked per run),
+#                                 so kernel regressions fail fast and in
 #                                 isolation from the (slower) tier-1 run.
+#   scripts/ci.sh search          policy-search smoke: 2-iteration (gs, n_p)
+#                                 co-exploration on the tiny arch; fails
+#                                 unless the Pareto front is non-empty with
+#                                 a heterogeneous member and the winning
+#                                 policy round-trips calibrate -> export ->
+#                                 pallas with parity.
 #
 # Collection regressions (missing modules, import errors) fail the run
 # because pytest errors out before running a single test.
@@ -20,7 +28,12 @@ if [[ "${1:-}" == "kernel-backend" ]]; then
     shift
     python -m pytest -q tests/test_kernels.py tests/test_exec.py "$@"
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-        python -m benchmarks.kernel_bench --smoke
+        python -m benchmarks.kernel_bench --smoke --json BENCH_kernel.json
+elif [[ "${1:-}" == "search" ]]; then
+    shift
+    python -m pytest -q tests/test_search.py "$@"
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.search.cli --arch tinyllama-1.1b --budget-smoke
 else
     python -m pytest -x -q "$@"
 fi

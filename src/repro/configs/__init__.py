@@ -27,11 +27,22 @@ _MODULES = {
 
 ARCH_NAMES = tuple(_MODULES)
 
+_MODULE_TO_ARCH = {v: k for k, v in _MODULES.items()}
+
+
+def canonical_arch(name: str) -> str:
+    """Registry id for ``name``, accepting module-style spellings too
+    (``tinyllama_1_1b`` == ``tinyllama-1.1b``)."""
+    if name in _MODULES:
+        return name
+    if name in _MODULE_TO_ARCH:
+        return _MODULE_TO_ARCH[name]
+    raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+
 
 def _module(name: str):
-    if name not in _MODULES:
-        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
-    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return importlib.import_module(
+        f"repro.configs.{_MODULES[canonical_arch(name)]}")
 
 
 def get_config(name: str, quant="none", gs: int = 2,
@@ -78,4 +89,4 @@ def cells_for(name: str) -> dict:
 
 
 __all__ = ["ARCH_NAMES", "SHAPE_CELLS", "ModelConfig", "ShapeCell",
-           "cells_for", "get_config", "get_smoke"]
+           "canonical_arch", "cells_for", "get_config", "get_smoke"]

@@ -3,6 +3,7 @@ from .model import (
     HORO,
     AcceleratorConfig,
     EnergyConstants,
+    LayerEnergySpec,
     LayerShape,
     access_counts,
     energy_summary,
@@ -21,7 +22,8 @@ from .workloads import (
 )
 
 __all__ = [
-    "HORO", "AcceleratorConfig", "EnergyConstants", "LayerShape",
+    "HORO", "AcceleratorConfig", "EnergyConstants", "LayerEnergySpec",
+    "LayerShape",
     "access_counts", "energy_summary", "layer_energy", "model_energy",
     "savings", "arch_layers", "bert_base", "efficientvit_b1", "llama2_7b",
     "llama2_7b_autoregressive", "llama2_7b_combined", "segformer_b0",

@@ -68,12 +68,38 @@ class LayerShape:
 DATAFLOWS = ("IS", "WS", "OS")
 
 
+@dataclasses.dataclass(frozen=True)
+class LayerEnergySpec:
+    """One layer's *resolved* energy knobs (heterogeneous per-layer model).
+
+    The paper's Table IV uses one global beta; the RAE's reconfigurability
+    (§III-C) makes ``(gs, psum_bits)`` — and even the dataflow — per-layer
+    choices.  ``repro.search`` resolves a ``QuantPolicy`` against a model's
+    GEMM inventory into a list of these; ``model_energy`` consumes them
+    directly (a plain ``LayerShape`` is shorthand for the uniform knobs
+    passed as keyword arguments).
+
+    ``n_p`` overrides the accelerator-derived tile count
+    ``ceil(C_i / P_ci)`` — a policy's K-tiling choice maps onto the
+    hardware as a different effective input-channel parallelism, scaling
+    the PSUM read-modify-write traffic (eqs 3-6 count ``2(n_p - 1)``
+    buffer accesses per output).
+    """
+
+    layer: LayerShape
+    psum_bits: int = 32
+    gs: int = 1
+    dataflow: str | None = None   # None -> the model-level dataflow
+    n_p: int | None = None        # None -> ceil(C_i / P_ci)
+
+
 def _ceil(a: int, b: int) -> int:
     return -(-a // b)
 
 
 def access_counts(layer: LayerShape, acc: AcceleratorConfig, dataflow: str,
-                  *, beta: float, gs: int = 1) -> dict:
+                  *, beta: float, gs: int = 1,
+                  n_p: int | None = None) -> dict:
     """Eqs (3)-(6): access *multipliers* N^{i,w,p,o} for SRAM and DRAM.
 
     beta: PSUM precision ratio (psum_bits / 8); enters the capacity
@@ -81,10 +107,15 @@ def access_counts(layer: LayerShape, acc: AcceleratorConfig, dataflow: str,
     via the beta * S_o * N^p term (handled in ``layer_energy``).
     gs: number of live PSUM tiles (Algorithm 1 grouping) — scales only the
     capacity conditions.
+    n_p: PSUM tile count along K; defaults to the accelerator-derived
+    ``ceil(C_i / P_ci)`` (a per-layer policy override models a different
+    effective P_ci for this layer).
     """
     T, Ci, Co = layer.tokens, layer.c_i, layer.c_o
     S_i, S_w, S_o = T * Ci, Ci * Co, T * Co  # bytes at INT8
-    n_p = _ceil(Ci, acc.P_ci)
+    if n_p is None:
+        n_p = _ceil(Ci, acc.P_ci)
+    n_p = max(1, min(n_p, Ci))
 
     if dataflow == "IS":
         # ifmap tile = P_o tokens held in the array; weights stream.
@@ -140,11 +171,11 @@ def access_counts(layer: LayerShape, acc: AcceleratorConfig, dataflow: str,
 
 
 def layer_energy(layer: LayerShape, acc: AcceleratorConfig, dataflow: str,
-                 *, psum_bits: int = 32, gs: int = 1,
+                 *, psum_bits: int = 32, gs: int = 1, n_p: int | None = None,
                  consts: EnergyConstants = HORO) -> dict:
     """Eq (1)+(2): energy breakdown {ifmap, weight, psum, ofmap, op} in J."""
     beta = psum_bits / 8.0
-    cnt = access_counts(layer, acc, dataflow, beta=beta, gs=gs)
+    cnt = access_counts(layer, acc, dataflow, beta=beta, gs=gs, n_p=n_p)
     S = cnt["sizes"]
     r = layer.repeat
 
@@ -175,12 +206,23 @@ def layer_energy(layer: LayerShape, acc: AcceleratorConfig, dataflow: str,
 def model_energy(layers: list, acc: AcceleratorConfig, dataflow: str,
                  *, psum_bits: int = 32, gs: int = 1,
                  consts: EnergyConstants = HORO) -> dict:
-    """Sum of ``layer_energy`` over a model's layer walk."""
+    """Sum of ``layer_energy`` over a model's layer walk.
+
+    ``layers`` mixes plain ``LayerShape`` entries (which take the uniform
+    ``psum_bits``/``gs``/``dataflow`` given here — the paper's global-beta
+    setting) and ``LayerEnergySpec`` entries carrying their own per-layer
+    knobs (the heterogeneous model ``repro.search`` scores policies with).
+    """
     total = {k: 0.0 for k in ("ifmap", "weight", "psum", "ofmap", "op",
                               "total", "sram_bytes", "dram_bytes", "macs")}
     for layer in layers:
-        e = layer_energy(layer, acc, dataflow, psum_bits=psum_bits, gs=gs,
-                         consts=consts)
+        if isinstance(layer, LayerEnergySpec):
+            e = layer_energy(layer.layer, acc, layer.dataflow or dataflow,
+                             psum_bits=layer.psum_bits, gs=layer.gs,
+                             n_p=layer.n_p, consts=consts)
+        else:
+            e = layer_energy(layer, acc, dataflow, psum_bits=psum_bits,
+                             gs=gs, consts=consts)
         for k in total:
             total[k] += e[k]
     return total

@@ -45,7 +45,13 @@ from repro.models.model import (
     lm_specs,
 )
 from repro.optim import OptimConfig, init_opt_state
-from repro.roofline import analyze_hlo, cost_terms, model_flops, V5E
+from repro.roofline import (
+    V5E,
+    analyze_hlo,
+    backend_corrected_terms,
+    cost_terms,
+    model_flops,
+)
 from repro.train import TrainConfig, make_train_step, shardings_for_training
 
 SDS = jax.ShapeDtypeStruct
@@ -196,68 +202,16 @@ def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh, rules=None, **kw):
 
 
 # ---------------------------------------------------------------------------
-# Quant-policy sweeps + execution-backend parity
+# Quant-policy sweeps + execution-backend parity — shared with the policy
+# search (``repro.search``); re-exported here so existing callers keep
+# importing them from the dry-run module.
 # ---------------------------------------------------------------------------
 
-def describe_policy(quant) -> list:
-    """Human-readable rule list for a QuantPolicy (JSON-report friendly)."""
-    def one(cfg):
-        if cfg is None:
-            return "float"
-        if not cfg.enabled:
-            return "disabled"
-        if cfg.psum.mode == "none":
-            return f"w{cfg.w_bits}a{cfg.a_bits}"
-        return (f"{cfg.psum.mode}(gs={cfg.psum.gs},n_p={cfg.psum.n_p},"
-                f"bits={cfg.psum.bits})")
-
-    rules = [[r.pattern, one(r.config)]
-             for r in getattr(quant, "rules", ())]
-    rules.append(["<default>", one(getattr(quant, "default", quant))])
-    return rules
-
-
-def backend_parity_report(cfg: ModelConfig, m: int = 8) -> dict:
-    """Oracle-vs-pallas execution check at the arch's GEMM shape.
-
-    Exports one calibrated [d_model, d_model] linear under the cfg's
-    policy and runs it through ``repro.exec.backend_parity_check``
-    (pallas in interpret mode off-TPU) — the side-by-side parity +
-    wall-clock the roofline table reports next to each quantized cell.
-    """
-    from repro.core import quant_params_init, calibrate_dense
-    from repro.exec import backend_parity_check
-    from repro.quant.export import export_quantized
-    from repro.quant.policy import resolve_quant
-
-    # Probe the policy at representative layer names and prefer a
-    # PSUM-quantized resolution — a sweep like "ffn_only" must be
-    # parity-checked on the APSQ path it exists to measure, not on
-    # whatever plain-W8A8 config the first attention layer resolves to.
-    probe, resolved = None, None
-    for name in ("unit.0.mix.wq", "unit.0.ffn.wi", "rem.0.mix.wq",
-                 "encoder.unit.0.mix.wq", "head"):
-        r = resolve_quant(cfg.policy, name)
-        if r is None:
-            continue
-        if resolved is None or (resolved.psum.mode == "none"
-                                and r.psum.mode != "none"):
-            probe, resolved = name, r
-        if resolved.psum.mode != "none":
-            break
-    if resolved is None:
-        return {"skipped": "no quantized layers under this policy"}
-    k = min(cfg.d_model, 512)  # representative reduction dim, CPU-cheap
-    key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (m, k))
-    w = jax.random.normal(jax.random.fold_in(key, 1), (k, k)) * 0.05
-    qp = calibrate_dense(quant_params_init(w, resolved, name=probe), x, w)
-    dep, _ = export_quantized({"lin": {"w": w, "qp": qp}})
-    _, times, bit_equal = backend_parity_check(dep["lin"]["qp"], x)
-    return {"bit_equal": bit_equal, "layer": probe, "shape": [m, k, k],
-            "mode": resolved.psum.mode, "gs": resolved.psum.gs,
-            "n_p": resolved.psum.n_p,
-            **{f"{name}_us": round(t, 1) for name, t in times.items()}}
+from repro.search.evaluate import (  # noqa: E402  (re-export)
+    backend_parity_report,
+    describe_policy,
+    policy_sweep,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -313,6 +267,14 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool = False,
             {"flops": hlo["flops"], "bytes accessed": hlo["bytes"]},
             hlo["collectives"], n_chips)
         report.update(terms)
+        # Backend-aware roofline (ROADMAP follow-up): when this cell
+        # carries a measured backend_parity timing, scale the analytic
+        # compute term by measured/analytic on the probe GEMM instead of
+        # trusting datasheet rates alone.
+        if report.get("backend_parity"):
+            corr = backend_corrected_terms(terms, report["backend_parity"])
+            if corr:
+                report["backend_roofline"] = corr
         report["collectives"] = hlo["collectives"]
         report["collective_counts"] = hlo["collective_counts"]
         report["hlo_warnings"] = hlo["warnings"][:10]
@@ -384,15 +346,10 @@ def main():
 
     quants = [(args.quant, args.quant)]
     if args.quant_policy is not None:
-        from repro.quant import policy_presets
-        presets = policy_presets()
-        names = (sorted(presets) if args.quant_policy == "all"
-                 else [args.quant_policy])
         try:
-            quants = [(f"policy_{n}", presets[n]) for n in names]
-        except KeyError:
-            raise SystemExit(f"unknown --quant-policy {args.quant_policy!r};"
-                             f" known: {sorted(presets)} or 'all'")
+            quants = policy_sweep(args.quant_policy)
+        except KeyError as e:
+            raise SystemExit(e.args[0])
 
     archs = ARCH_NAMES if args.arch == "all" else (args.arch,)
     meshes = {"single": (False,), "multi": (True,),

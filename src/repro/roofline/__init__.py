@@ -3,13 +3,15 @@ from .analysis import (
     COLLECTIVE_OPS,
     HwSpec,
     V5E,
+    backend_corrected_terms,
     collective_bytes,
     cost_terms,
+    gemm_analytic_us,
     model_flops,
     useful_fraction,
 )
 from .hlo_cost import analyze_hlo
 
 __all__ = ["COLLECTIVE_OPS", "HwSpec", "V5E", "analyze_hlo",
-           "collective_bytes", "cost_terms", "model_flops",
-           "useful_fraction"]
+           "backend_corrected_terms", "collective_bytes", "cost_terms",
+           "gemm_analytic_us", "model_flops", "useful_fraction"]

@@ -142,3 +142,51 @@ def useful_fraction(mf: float, hlo_flops: float) -> float:
     global model FLOPs by n_chips before calling).
     """
     return mf / hlo_flops if hlo_flops else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Backend-aware correction: measured kernel timings vs the analytic model
+# ---------------------------------------------------------------------------
+
+def gemm_analytic_us(m: int, k: int, n: int, hw: HwSpec = V5E) -> float:
+    """Analytic roofline time (us) of one INT8 GEMM [m,k]x[k,n].
+
+    INT8 operands in, INT32 PSUM result out — the deployed shape the
+    ``backend_parity`` probe measures.
+    """
+    flops = 2.0 * m * k * n
+    bytes_ = m * k + k * n + 4.0 * m * n
+    return max(flops / hw.peak_flops, bytes_ / hw.hbm_bw) * 1e6
+
+
+def backend_corrected_terms(terms: dict, parity: dict,
+                            hw: HwSpec = V5E) -> dict:
+    """Fold a measured ``backend_parity`` timing into the roofline.
+
+    The dry-run cost model is analytic (GEMM FLOPs/bytes at datasheet
+    rates); the parity probe *measures* the same deployed GEMM through
+    the execution backend.  ``correction = measured / analytic`` on the
+    probe shape scales the compute term — so quantized cells report what
+    the kernel actually delivers, not what the datasheet promises.  Off
+    TPU the kernel runs in interpret mode and the factor is enormous;
+    it becomes meaningful on hardware (the measurement path is the same).
+    Returns {} when the parity report has no usable timing.
+    """
+    shape = parity.get("shape")
+    measured = parity.get("pallas_us", parity.get("oracle_us"))
+    if not shape or not measured:
+        return {}
+    analytic = gemm_analytic_us(*shape, hw=hw)
+    correction = measured / analytic if analytic else 0.0
+    corrected_compute = terms.get("compute_s", 0.0) * correction
+    corrected_bound = max(corrected_compute, terms.get("memory_s", 0.0),
+                          terms.get("collective_s", 0.0),
+                          terms.get("dcn_s", 0.0))
+    return {
+        "probe_shape": list(shape),
+        "probe_measured_us": round(measured, 1),
+        "probe_analytic_us": analytic,
+        "correction": correction,
+        "corrected_compute_s": corrected_compute,
+        "corrected_bound_s": corrected_bound,
+    }

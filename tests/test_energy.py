@@ -4,6 +4,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.energy import (
     AcceleratorConfig,
+    LayerEnergySpec,
     LayerShape,
     access_counts,
     bert_base,
@@ -105,6 +106,94 @@ def test_llama_tableiv_pattern():
     base_is = model_energy(layers, acc, "IS", psum_bits=32)
     ai = model_energy(layers, acc, "IS", psum_bits=8, gs=1)
     assert base_is["total"] / ai["total"] < 1.1     # paper: 1.02x
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-layer model (LayerEnergySpec): the repro.search substrate
+# ---------------------------------------------------------------------------
+
+def test_heterogeneous_psum_bits_sum_correctly():
+    """model_energy over mixed-psum_bits specs == sum of layer_energy."""
+    l1 = LayerShape("a", 128, 768, 3072)
+    l2 = LayerShape("b", 128, 3072, 768)
+    specs = [LayerEnergySpec(l1, psum_bits=8, gs=2),
+             LayerEnergySpec(l2, psum_bits=32, gs=1)]
+    tot = model_energy(specs, ACC, "WS")
+    e1 = layer_energy(l1, ACC, "WS", psum_bits=8, gs=2)
+    e2 = layer_energy(l2, ACC, "WS", psum_bits=32, gs=1)
+    for k in ("psum", "total", "ifmap", "weight", "ofmap", "op"):
+        assert tot[k] == pytest.approx(e1[k] + e2[k])
+    # and the mixed total sits strictly between the two uniform extremes
+    uni8 = model_energy([l1, l2], ACC, "WS", psum_bits=8, gs=2)
+    uni32 = model_energy([l1, l2], ACC, "WS", psum_bits=32)
+    assert uni8["psum"] < tot["psum"] < uni32["psum"]
+
+
+def test_plain_shapes_and_specs_mix_in_one_walk():
+    """A LayerShape entry takes the uniform kwargs; a spec its own."""
+    l = LayerShape("x", 128, 768, 768)
+    mixed = model_energy([l, LayerEnergySpec(l, psum_bits=8, gs=2)],
+                         ACC, "WS", psum_bits=32)
+    e32 = layer_energy(l, ACC, "WS", psum_bits=32)
+    e8 = layer_energy(l, ACC, "WS", psum_bits=8, gs=2)
+    assert mixed["total"] == pytest.approx(e32["total"] + e8["total"])
+
+
+def test_per_layer_dataflow_override():
+    """A spec pinning OS contributes zero PSUM traffic in a WS walk."""
+    l = LayerShape("x", 128, 768, 768)
+    specs = [LayerEnergySpec(l, psum_bits=8, gs=1, dataflow="OS")]
+    e = model_energy(specs, ACC, "WS")
+    assert e["psum"] == 0.0
+
+
+def test_per_layer_gs_cliff_segformer_class():
+    """Fig. 6 cliff, per layer: only the big-ofmap layer pays gs=3.
+
+    Segformer/EfficientViT-class stage-1 shapes (16k+ tokens, narrow
+    channels) overflow B_o once gs >= 3 INT8 PSUM tile sets are live;
+    a small layer in the same walk at gs=3 must NOT pay it.
+    """
+    big = LayerShape("seg_s0", 16384, 256, 256)     # Segformer stage-1
+    small = LayerShape("ffn", 128, 768, 768)        # fits at any gs <= 4
+    e_big2 = model_energy([LayerEnergySpec(big, psum_bits=8, gs=2)],
+                          ACC, "WS")
+    e_big3 = model_energy([LayerEnergySpec(big, psum_bits=8, gs=3)],
+                          ACC, "WS")
+    assert e_big3["psum"] > 2 * e_big2["psum"]      # DRAM spill cliff
+    assert e_big3["dram_bytes"] > e_big2["dram_bytes"]
+    e_sm2 = model_energy([LayerEnergySpec(small, psum_bits=8, gs=2)],
+                         ACC, "WS")
+    e_sm3 = model_energy([LayerEnergySpec(small, psum_bits=8, gs=3)],
+                         ACC, "WS")
+    assert e_sm3["psum"] == pytest.approx(e_sm2["psum"])
+    # heterogeneous walk = its layers' sum (the cliff stays per-layer)
+    het = model_energy([LayerEnergySpec(big, psum_bits=8, gs=2),
+                        LayerEnergySpec(small, psum_bits=8, gs=3)],
+                       ACC, "WS")
+    assert het["psum"] == pytest.approx(e_big2["psum"] + e_sm3["psum"])
+
+
+def test_efficientvit_class_cliff_gs3_heterogeneous():
+    """EfficientViT-B1-class walk via specs reproduces the gs>=3 cliff."""
+    layers = efficientvit_b1()
+    s = []
+    base = model_energy(layers, ACC, "WS", psum_bits=32)
+    for g in (2, 3):
+        specs = [LayerEnergySpec(l, psum_bits=8, gs=g) for l in layers]
+        s.append(savings(base, model_energy(specs, ACC, "WS")))
+    assert s[1] < s[0] - 0.05
+
+
+def test_n_p_override_scales_psum_traffic():
+    """More PSUM tiles along K -> strictly more PSUM buffer traffic."""
+    l = LayerShape("x", 128, 768, 768)
+    e_hw = layer_energy(l, ACC, "WS", psum_bits=8)           # n_p = 96
+    e_fine = layer_energy(l, ACC, "WS", psum_bits=8, n_p=192)
+    e_coarse = layer_energy(l, ACC, "WS", psum_bits=8, n_p=48)
+    assert e_coarse["psum"] < e_hw["psum"] < e_fine["psum"]
+    for k in ("weight", "ifmap", "op"):                      # psum-only knob
+        assert e_coarse[k] == e_hw[k] == e_fine[k]
 
 
 def test_savings_in_paper_band():

@@ -1,0 +1,265 @@
+"""repro.search: inventory namespace, candidates, Pareto, scoring."""
+import random
+
+import jax
+import pytest
+
+from repro.configs import canonical_arch, get_config
+from repro.core import QuantConfig, QuantState
+from repro.energy import AcceleratorConfig
+from repro.models.config import ModelConfig
+from repro.models.model import init_lm
+from repro.quant import QuantPolicy
+from repro.roofline import backend_corrected_terms, gemm_analytic_us
+from repro.search import (
+    SearchSpace,
+    accuracy_proxy,
+    dominates,
+    energy_report,
+    energy_specs,
+    layer_classes,
+    make_eval_batch,
+    model_inventory,
+    oracle_logits,
+    pareto_front,
+    quantizable_names,
+    roundtrip_report,
+)
+from repro.search.candidates import mutate, seed_candidates, \
+    uniform_baselines
+from repro.search.pareto import ScoredCandidate
+
+ACC = AcceleratorConfig()
+
+
+def tiny_cfg(**kw) -> ModelConfig:
+    base = dict(name="tiny", family="dense", n_layers=2, d_model=32,
+                n_heads=2, n_kv_heads=1, d_ff=64, vocab=64,
+                dtype="float32", scan_layers=False)
+    base.update(kw)
+    return ModelConfig(**base).validate()
+
+
+def quant_state_names(params) -> set:
+    names = set()
+
+    def walk(tree):
+        if isinstance(tree, QuantState):
+            names.add(tree.name)
+        elif isinstance(tree, dict):
+            for v in tree.values():
+                walk(v)
+    walk(params)
+    return names
+
+
+# ---------------------------------------------------------------------------
+# Inventory: the shared layer namespace
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    {},                                                      # dense swiglu
+    {"block_pattern": ("attn", "local"), "n_layers": 3},     # rem layer
+    {"mlp": "moe", "n_experts": 2, "top_k": 1},              # MoE
+    {"block_pattern": ("rwkv",), "mlp": "rwkv_cm"},          # RWKV
+    {"block_pattern": ("rglru",), "d_rnn": 32},              # RG-LRU
+    {"encdec": True, "n_enc_layers": 2},                     # enc-dec
+])
+def test_inventory_names_match_init_lm(kw):
+    """Every QuantState name init_lm creates appears in the inventory
+    (and vice versa — 'head' exists only for tied embeddings)."""
+    cfg = tiny_cfg(**kw).with_quant(
+        QuantPolicy.uniform(QuantConfig.apsq(gs=2, n_p=4)))
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    init_names = quant_state_names(params)
+    inv_names = set(quantizable_names(model_inventory(cfg, 64)))
+    assert init_names, "no quantized linears built?"
+    assert inv_names - {"head"} == init_names
+
+
+def test_inventory_tied_head_in_namespace():
+    inv = model_inventory(tiny_cfg(tie_embeddings=True), 64)
+    assert "head" in quantizable_names(inv)
+    inv = model_inventory(tiny_cfg(), 64)
+    assert "head" not in quantizable_names(inv)
+    # the untied head GEMM still contributes energy, anonymously
+    assert any(e.shape.name == "head" and not e.quantizable for e in inv)
+
+
+def test_inventory_scan_stack_folds_repeats():
+    """22 scan-stacked layers share names -> repeat carries the count."""
+    cfg = get_config("tinyllama-1.1b")
+    inv = model_inventory(cfg, 4096)
+    wq = next(e for e in inv if e.shape.name == "unit.0.mix.wq")
+    assert wq.shape.repeat == cfg.n_layers
+    assert wq.shape.c_i == cfg.d_model
+
+
+def test_inventory_decode_stage_single_token():
+    cfg = tiny_cfg()
+    inv = model_inventory(cfg, 128, stage="decode")
+    wq = next(e for e in inv if e.shape.name.endswith("mix.wq"))
+    assert wq.shape.tokens == 1
+    scores = next(e for e in inv if e.shape.name.endswith("mix.scores"))
+    assert scores.shape.c_o == 128          # attends to the KV history
+
+
+def test_layer_classes_grouping():
+    classes = layer_classes(model_inventory(tiny_cfg(), 64))
+    assert set(classes) == {"*.mix.*", "*.ffn.*"}
+    assert "unit.0.mix.wq" in classes["*.mix.*"]
+    assert "unit.0.ffn.wo" in classes["*.ffn.*"]
+    classes = layer_classes(
+        model_inventory(tiny_cfg(block_pattern=("attn", "local"),
+                                 n_layers=3), 64))
+    assert "rem.*" in classes
+    # precedence: specific classes MUST precede generic ones — candidate
+    # policies are first-match-wins, so '*.mix.*' before 'rem.*' would
+    # silently shadow the remainder-layer knob
+    order = list(classes)
+    assert order.index("rem.*") < order.index("*.mix.*")
+    from repro.search.candidates import Candidate
+    cand = Candidate(name="t", assignment=tuple(
+        (p, ("w8a8",) if p == "rem.*" else ("apsq", 2, 4))
+        for p in classes))
+    assert cand.policy().resolve("rem.0.mix.wq") == QuantConfig.w8a8()
+
+
+def test_energy_specs_resolution():
+    inv = model_inventory(tiny_cfg(), 64)
+    policy = QuantPolicy.of(
+        ("*.ffn.*", QuantConfig.apsq(gs=2, n_p=4)),
+        default=QuantConfig.w8a8())
+    specs = {s.layer.name: s for s in energy_specs(inv, policy, ACC)}
+    ffn = specs["unit.0.ffn.wi"]
+    assert ffn.psum_bits == 8 and ffn.gs == 2
+    assert ffn.n_p >= -(-32 // ACC.P_ci)     # hardware floor on tiling
+    mix = specs["unit.0.mix.wq"]
+    assert mix.psum_bits == 32 and mix.n_p is None
+    # PSQ keeps every tile live
+    psq = QuantPolicy.uniform(QuantConfig.psq(n_p=4))
+    s = {x.layer.name: x for x in energy_specs(inv, psq, ACC)}
+    assert s["unit.0.ffn.wi"].gs == s["unit.0.ffn.wi"].n_p
+
+
+# ---------------------------------------------------------------------------
+# Candidates + Pareto
+# ---------------------------------------------------------------------------
+
+def test_candidates_and_mutation():
+    classes = layer_classes(model_inventory(tiny_cfg(), 64))
+    space = SearchSpace()
+    bases = uniform_baselines(classes, space)
+    assert all(not c.heterogeneous for c in bases)
+    assert any(c.name == "uniform_w8a8" for c in bases)
+    seeds = seed_candidates(classes, space)
+    assert seeds and all(c.heterogeneous for c in seeds)
+    # policies lower to resolvable QuantPolicy rules
+    pol = seeds[0].policy()
+    assert pol.resolve("unit.0.ffn.wi") is not None
+    rng = random.Random(0)
+    child = mutate(seeds[0], rng, space)
+    diff = [i for i, (a, b) in enumerate(zip(seeds[0].assignment,
+                                             child.assignment)) if a != b]
+    assert len(diff) == 1                     # exactly one local move
+
+
+def test_policy_sweep_and_fixed_candidates():
+    """The dryrun --quant-policy sweep resolution is the shared helper,
+    and presets enter the search as unmutatable fixed candidates."""
+    from repro.search import FixedCandidate, policy_sweep
+
+    sweep = dict(policy_sweep("all"))
+    assert "policy_mix2_ffn4" in sweep
+    assert dict(policy_sweep("ffn_only"))  # single preset
+    with pytest.raises(KeyError):
+        policy_sweep("nonesuch")
+    cand = FixedCandidate(name="policy_mix2_ffn4",
+                          fixed_policy=sweep["policy_mix2_ffn4"])
+    assert cand.heterogeneous
+    assert cand.policy().resolve("unit.0.ffn.wi").psum.mode == "apsq"
+    assert cand.describe()["origin"] == "preset"
+
+
+def test_pareto_front_dominance():
+    def pt(name, e, err, het=True):
+        cand = seed_candidates(
+            layer_classes(model_inventory(tiny_cfg(), 64)),
+            SearchSpace())[0]
+        cand = type(cand)(name=name, assignment=cand.assignment)
+        return ScoredCandidate(candidate=cand, energy_j=e, error=err)
+
+    a = pt("a", 1.0, 0.5)
+    b = pt("b", 2.0, 0.3)
+    c = pt("c", 2.5, 0.4)    # dominated by b
+    d = pt("d", 1.0, 0.5)    # duplicate of a
+    assert dominates(b, c) and not dominates(a, b)
+    front = pareto_front([a, b, c, d])
+    assert [p.candidate.name for p in front] == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# Scoring axes + round trip (integration, CPU-tiny)
+# ---------------------------------------------------------------------------
+
+def test_energy_report_policy_ordering():
+    cfg = get_config("tinyllama-1.1b")
+    inv = model_inventory(cfg, 4096)
+    w8a8 = energy_report(cfg, QuantPolicy.uniform(QuantConfig.w8a8()),
+                         inventory=inv)
+    apsq = energy_report(cfg, QuantPolicy.uniform(QuantConfig.apsq()),
+                         inventory=inv)
+    het = energy_report(cfg, QuantPolicy.of(
+        ("*.ffn.*", QuantConfig.apsq()), default=QuantConfig.w8a8()),
+        inventory=inv)
+    assert apsq["energy_j"] < het["energy_j"] < w8a8["energy_j"]
+    assert apsq["saving"] > 0.2               # paper-band PSUM saving
+    assert w8a8["saving"] == pytest.approx(0.0)
+
+
+def test_accuracy_proxy_and_roundtrip():
+    """More aggressive PSUM quantization -> larger proxy error, and the
+    searched policy serves through calibrate -> export -> pallas."""
+    cfg = tiny_cfg()
+    batch = make_eval_batch(cfg, 1, 16)
+    ref = oracle_logits(cfg, batch)
+    w8a8 = accuracy_proxy(cfg, QuantPolicy.uniform(QuantConfig.w8a8()),
+                          batch, ref)
+    apsq = accuracy_proxy(
+        cfg, QuantPolicy.uniform(QuantConfig.apsq(gs=1, n_p=8)), batch, ref)
+    assert 0 < w8a8["error"] < apsq["error"]
+    assert 0 <= w8a8["top1_agreement"] <= 1
+
+    policy = QuantPolicy.of(("*.ffn.*", QuantConfig.apsq(gs=2, n_p=4)),
+                            default=QuantConfig.w8a8())
+    rt = roundtrip_report(cfg, policy, batch, max_new_tokens=4)
+    assert rt["ok"]
+    assert rt["gemm_parity"]["bit_equal"]
+    assert rt["serving_parity"]
+    assert rt["decode"]["oracle"] == rt["decode"]["pallas"]
+
+
+# ---------------------------------------------------------------------------
+# Satellites living nearby: arch aliases + backend-aware roofline
+# ---------------------------------------------------------------------------
+
+def test_canonical_arch_accepts_module_spelling():
+    assert canonical_arch("tinyllama_1_1b") == "tinyllama-1.1b"
+    assert canonical_arch("tinyllama-1.1b") == "tinyllama-1.1b"
+    with pytest.raises(KeyError):
+        canonical_arch("nonesuch")
+
+
+def test_backend_corrected_terms():
+    terms = {"compute_s": 1e-3, "memory_s": 2e-3, "collective_s": 0.0,
+             "dcn_s": 0.0}
+    parity = {"shape": [8, 512, 512], "pallas_us": 100.0,
+              "oracle_us": 50.0}
+    corr = backend_corrected_terms(terms, parity)
+    analytic = gemm_analytic_us(8, 512, 512)
+    assert corr["probe_analytic_us"] == pytest.approx(analytic)
+    assert corr["correction"] == pytest.approx(100.0 / analytic)
+    assert corr["corrected_compute_s"] == pytest.approx(
+        1e-3 * corr["correction"])
+    assert corr["corrected_bound_s"] >= corr["corrected_compute_s"]
+    assert backend_corrected_terms(terms, {"skipped": "x"}) == {}
