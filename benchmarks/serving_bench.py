@@ -1,0 +1,225 @@
+"""Serving benchmark: continuous batching under Poisson load.
+
+Drives the ``PagedServingEngine`` (INT8 paged KV cache, scheduler with
+admission/eviction, prefill bucketing) with a synthetic open-loop load:
+request arrivals are a Poisson process over decode steps, prompt and
+output lengths are mixed, and every stream decodes greedily.  Reported:
+
+  * tokens/s (aggregate decode throughput across all streams),
+  * p50/p99 per-token latency (wall-clock of the engine step that
+    produced each token) and p50/p99 time-to-first-token,
+  * scheduler counters (admissions, preemptions) under the page pool,
+  * KV-cache bytes: paged INT8 pools vs the dense f32 / native-dtype
+    caches the ``ServingEngine`` baseline would allocate.
+
+Before generating load the bench runs the parity gate the CI ``serve``
+job rides on: greedy outputs of the batched engine must be
+token-identical to the single-stream engine (same pools, batch 1), and
+the oracle and interpret-mode Pallas backends must agree token-for-token
+through the ``kv_attention`` exec op family.  A parity failure is a
+hard error — throughput numbers from a wrong engine are worthless.
+
+``--smoke`` (the CI job) runs 64 concurrent streams on the smoke
+tinyllama config; the full run drives hundreds of streams.  ``--json
+BENCH_serving.json`` emits machine-readable records so the serving
+trajectory is tracked across PRs like ``BENCH_kernel.json``.
+"""
+import argparse
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.exec import PallasBackend
+from repro.models.model import init_lm
+from repro.serving import PagedServingEngine, Request, paged_cache_bytes
+
+
+def _engine(params, cfg, *, max_batch, n_pages, backend="auto",
+            page_size=16, prefill_chunk=16):
+    return PagedServingEngine(
+        params, cfg, max_batch=max_batch, page_size=page_size,
+        n_pages=n_pages, prefill_chunk=prefill_chunk, backend=backend)
+
+
+def _requests(cfg, n_streams, rng, *, max_new_lo=4, max_new_hi=12,
+              prompt_lo=4, prompt_hi=14):
+    reqs = []
+    for i in range(n_streams):
+        L = int(rng.integers(prompt_lo, prompt_hi))
+        reqs.append(Request(
+            uid=i, tokens=rng.integers(0, cfg.vocab, L).astype(np.int32),
+            max_new_tokens=int(rng.integers(max_new_lo, max_new_hi))))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# Parity gate (what CI's `serve` target asserts before trusting numbers)
+# ---------------------------------------------------------------------------
+
+def run_parity(params, cfg, print_fn=print, records: list | None = None):
+    """Batched == single-stream and oracle == pallas, token-for-token."""
+    rng = np.random.default_rng(7)
+    probes = _requests(cfg, 4, rng, max_new_lo=6, max_new_hi=7)
+
+    def outs(max_batch, backend):
+        eng = _engine(params, cfg, max_batch=max_batch, n_pages=48,
+                      backend=backend)
+        done = eng.run([Request(uid=r.uid, tokens=r.tokens,
+                                max_new_tokens=r.max_new_tokens)
+                        for r in probes])
+        return {r.uid: r.out for r in done}
+
+    single = outs(1, "oracle")
+    batched = outs(4, "oracle")
+    pallas = outs(4, PallasBackend(interpret=True))
+    batch_ok = batched == single
+    backend_ok = pallas == batched
+    print_fn(f"serving,parity,batched_eq_single={batch_ok},"
+             f"pallas_eq_oracle={backend_ok}")
+    if records is not None:
+        records.append({"section": "parity", "streams": len(probes),
+                        "batched_eq_single": batch_ok,
+                        "pallas_eq_oracle": backend_ok})
+    assert batch_ok, "batched paged engine diverged from single-stream"
+    assert backend_ok, "pallas kv_attention diverged from oracle"
+    return batch_ok and backend_ok
+
+
+# ---------------------------------------------------------------------------
+# Load generator
+# ---------------------------------------------------------------------------
+
+def run_load(params, cfg, *, n_streams, max_batch, arrival_rate,
+             seed=0, print_fn=print, records: list | None = None,
+             backend="auto"):
+    """Open-loop Poisson load: ``arrival_rate`` requests per decode step."""
+    rng = np.random.default_rng(seed)
+    reqs = _requests(cfg, n_streams, rng)
+    inter = rng.exponential(1.0 / arrival_rate, n_streams)
+    arrival_step = np.floor(np.cumsum(inter)).astype(int)
+
+    page_size = 16
+    # Pool sized so a full batch fits without thrashing but eviction is
+    # still reachable under bursts.
+    per_slot = -(-(14 + 12 + 1) // page_size) + 1
+    n_pages = max_batch * per_slot + 1
+    eng = _engine(params, cfg, max_batch=max_batch, n_pages=n_pages,
+                  backend=backend, page_size=page_size)
+
+    # Warm the two compiles (one prefill bucket, one decode shape) so the
+    # latency percentiles measure steady-state serving, not tracing.
+    warm = Request(uid=-1, tokens=np.zeros(4, np.int32), max_new_tokens=2)
+    eng.run([warm])
+
+    pending = sorted(zip(arrival_step, reqs), key=lambda x: x[0])
+    arrive_t: dict = {}
+    ttft: dict = {}
+    tok_lat: list = []
+    step = 0
+    n_done = 0
+    t_start = time.perf_counter()
+    while pending or eng.sched.waiting or any(
+            s is not None for s in eng.sched.slots):
+        while pending and pending[0][0] <= step:
+            _, r = pending.pop(0)
+            arrive_t[r.uid] = time.perf_counter()
+            eng.add_request(r)
+        before = {r.uid: len(r.out) for r in reqs}
+        t0 = time.perf_counter()
+        n_done += len(eng.step())
+        dt = time.perf_counter() - t0
+        for r in reqs:
+            new = len(r.out) - before[r.uid]
+            if new and r.uid not in ttft and before[r.uid] == 0:
+                ttft[r.uid] = time.perf_counter() - arrive_t[r.uid]
+            tok_lat.extend([dt] * new)
+        step += 1
+    wall = time.perf_counter() - t_start
+    eng.sched.assert_invariants()
+
+    total_tokens = sum(len(r.out) for r in reqs)
+    assert n_done == n_streams
+    lat_ms = np.asarray(tok_lat) * 1e3
+    ttft_ms = np.asarray(list(ttft.values())) * 1e3
+    bytes_ = paged_cache_bytes(cfg, n_pages=n_pages, page_size=page_size,
+                               max_batch=max_batch,
+                               cache_len=per_slot * page_size)
+    stats = eng.sched.stats
+    print_fn(
+        f"serving,load,streams={n_streams},max_batch={max_batch},"
+        f"steps={step},tokens={total_tokens},"
+        f"tokens_per_s={total_tokens / wall:.1f},"
+        f"p50_ms={np.percentile(lat_ms, 50):.1f},"
+        f"p99_ms={np.percentile(lat_ms, 99):.1f},"
+        f"ttft_p50_ms={np.percentile(ttft_ms, 50):.1f},"
+        f"ttft_p99_ms={np.percentile(ttft_ms, 99):.1f},"
+        f"admitted={stats.admitted},preempted={stats.preempted}")
+    print_fn(
+        f"serving,kv_bytes,int8_paged={bytes_['int8_paged']:.3e},"
+        f"dense_f32={bytes_['dense_f32']:.3e},"
+        f"ratio={bytes_['int8_paged'] / bytes_['dense_f32']:.3f}")
+    if records is not None:
+        records.append({
+            "section": "load", "streams": n_streams,
+            "max_batch": max_batch, "arrival_rate": arrival_rate,
+            "steps": step, "tokens": total_tokens,
+            "tokens_per_s": round(total_tokens / wall, 1),
+            "p50_ms": round(float(np.percentile(lat_ms, 50)), 2),
+            "p99_ms": round(float(np.percentile(lat_ms, 99)), 2),
+            "ttft_p50_ms": round(float(np.percentile(ttft_ms, 50)), 2),
+            "ttft_p99_ms": round(float(np.percentile(ttft_ms, 99)), 2),
+            "admitted": stats.admitted, "preempted": stats.preempted,
+            "kv_bytes": bytes_})
+    return total_tokens
+
+
+def run(print_fn=print, smoke: bool = False, records: list | None = None,
+        seed: int = 0):
+    cfg = get_smoke("tinyllama-1.1b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    run_parity(params, cfg, print_fn, records)
+    if smoke:  # the CI cell: 64 concurrent streams, oracle numbers
+        run_load(params, cfg, n_streams=64, max_batch=64, arrival_rate=8.0,
+                 seed=seed, print_fn=print_fn, records=records)
+    else:  # hundreds of streams, two concurrency points
+        for n_streams, max_batch in ((128, 32), (256, 64)):
+            run_load(params, cfg, n_streams=n_streams, max_batch=max_batch,
+                     arrival_rate=8.0, seed=seed, print_fn=print_fn,
+                     records=records)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="parity gate + one 64-stream load cell (CI job)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write machine-readable records "
+                         "(e.g. BENCH_serving.json)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    records: list | None = [] if args.json else None
+    run(smoke=args.smoke, records=records, seed=args.seed)
+    if args.json:
+        payload = {
+            "benchmark": "serving_bench",
+            "smoke": bool(args.smoke),
+            "unix_time": int(time.time()),
+            "jax_version": jax.__version__,
+            "jax_backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "records": records,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"serving,json -> {args.json} ({len(records)} records)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -145,3 +145,33 @@ for pname, pol in [
     r = energy_report(cfg_full, pol, inventory=inv)
     print(f"  {pname:20s} E={r['energy_j']:.2e} J "
           f"(saves {r['saving']:.0%} vs INT32 PSUM)")
+
+# --- 7. serve many streams: continuous batching over INT8 KV pages ----------
+# The production serving path: calibrate -> export -> PagedServingEngine.
+# Every attention layer's cache is a pool of fixed-size INT8 pages with
+# power-of-two scales (the paper's shift-only dequant argument applied to
+# the KV cache); a host-side scheduler admits requests as slots and pages
+# free up, grows each stream's page list on demand, and — when the pool
+# runs dry — preempts the latest-admitted stream and resumes it later
+# with bit-identical output.  Decode attention reads go through the
+# second ``repro.exec`` op family (``kv_attention``: Pallas flash-decode
+# kernel on TPU, jnp oracle elsewhere), so weights AND cache are integer
+# end to end.  ``benchmarks/serving_bench.py`` drives this engine with
+# hundreds of Poisson-arrival streams and reports tokens/s + p50/p99.
+from repro.serving import PagedServingEngine
+
+paged = PagedServingEngine.from_exported(
+    params, cfg, max_batch=4, page_size=8, n_pages=33, prefill_chunk=8)
+streams = [Request(uid=i, tokens=(np.arange(5 + i) * 3) % cfg.vocab,
+                   max_new_tokens=6) for i in range(8)]
+done = paged.run(streams)
+solo = PagedServingEngine.from_exported(
+    params, cfg, max_batch=1, page_size=8, n_pages=33, prefill_chunk=8)
+ref = solo.run([Request(uid=0, tokens=(np.arange(5) * 3) % cfg.vocab,
+                        max_new_tokens=6)])[0].out
+batched0 = next(r.out for r in done if r.uid == 0)
+print(f"\npaged INT8 serving: {len(done)} streams on 4 slots "
+      f"({paged.sched.stats.admitted} admissions, "
+      f"{paged.sched.stats.preempted} preemptions), "
+      f"batched == single-stream: {batched0 == ref}")
+assert batched0 == ref

@@ -15,6 +15,14 @@
 #                                 a heterogeneous member and the winning
 #                                 policy round-trips calibrate -> export ->
 #                                 pallas with parity.
+#   scripts/ci.sh serve           continuous-batching serving smoke: paged
+#                                 INT8 KV cache tests + serving_bench
+#                                 --smoke (64 Poisson streams).  The bench
+#                                 itself gates on backend decode parity —
+#                                 batched == single-stream and oracle ==
+#                                 interpret-mode pallas, token-for-token —
+#                                 before reporting tokens/s and p50/p99
+#                                 into BENCH_serving.json.
 #
 # Collection regressions (missing modules, import errors) fail the run
 # because pytest errors out before running a single test.
@@ -34,6 +42,11 @@ elif [[ "${1:-}" == "search" ]]; then
     python -m pytest -q tests/test_search.py "$@"
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m repro.search.cli --arch tinyllama-1.1b --budget-smoke
+elif [[ "${1:-}" == "serve" ]]; then
+    shift
+    python -m pytest -q tests/test_paged_serving.py tests/test_kernels_kv.py "$@"
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.serving_bench --smoke --json BENCH_serving.json
 else
     python -m pytest -x -q "$@"
 fi

@@ -1,7 +1,9 @@
-"""Execution-backend layer: how a deployed integer GEMM is computed.
+"""Execution-backend layer: how the integer op families are computed.
 
-One registry (``oracle`` | ``pallas`` | ``auto``) behind one entry point,
-``execute_gemm(deployed_layer, x)`` — see ``backends.py`` for the design.
+One registry (``oracle`` | ``pallas`` | ``auto``) behind two entry points:
+``execute_gemm(deployed_layer, x)`` for deployed integer GEMMs and
+``execute_kv_attention(q, k_codes, v_codes, ...)`` for decode attention
+over an INT8 KV cache — see ``backends.py`` for the design.
 """
 from .backends import (
     AutoBackend,
@@ -13,7 +15,9 @@ from .backends import (
     backend_parity_check,
     execute_expert_gemm,
     execute_gemm,
+    execute_kv_attention,
     get_backend,
+    kv_block_size,
     quantize_activations,
     register_backend,
 )
@@ -21,6 +25,7 @@ from .backends import (
 __all__ = [
     "AutoBackend", "DEFAULT_BACKEND", "ExecBackend", "OracleBackend",
     "PallasBackend", "available_backends", "backend_parity_check",
-    "execute_expert_gemm", "execute_gemm", "get_backend",
-    "quantize_activations", "register_backend",
+    "execute_expert_gemm", "execute_gemm", "execute_kv_attention",
+    "get_backend", "kv_block_size", "quantize_activations",
+    "register_backend",
 ]

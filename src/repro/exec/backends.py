@@ -38,17 +38,30 @@ from repro.core import DeployedQuantState, QuantConfig, qrange
 # ---------------------------------------------------------------------------
 
 class ExecBackend:
-    """How an integer GEMM on exported codes is computed.
+    """How the integer op families on exported/quantized data are computed.
 
-    ``int_gemm`` consumes INT8 activation codes [M, K], a deployed layer's
-    weight codes [K, N] and PSUM shift exponents ([n_p] or [n_p, N]; None
-    for plain W8A8) and returns the INT32 result in product-scale units.
+    Two op families, one registry:
+
+    * ``int_gemm`` consumes INT8 activation codes [M, K], a deployed
+      layer's weight codes [K, N] and PSUM shift exponents ([n_p] or
+      [n_p, N]; None for plain W8A8) and returns the INT32 result in
+      product-scale units.
+    * ``kv_attention`` consumes a query [B, Hq, hd] (float), an INT8 KV
+      cache ([B, S, Hkv, hd] codes with per-(batch, head) PO2 exponents)
+      and per-batch valid lengths, and returns decode attention output
+      [B, Hq, hd] — the serving engine's paged-cache read path.
     """
 
     name = "base"
 
     def int_gemm(self, x_codes: jax.Array, w_codes: jax.Array,
                  psum_exps: jax.Array | None, *, gs: int) -> jax.Array:
+        raise NotImplementedError
+
+    def kv_attention(self, q: jax.Array, k_codes: jax.Array,
+                     v_codes: jax.Array, k_exp: jax.Array,
+                     v_exp: jax.Array, length: jax.Array, *,
+                     block_s: int) -> jax.Array:
         raise NotImplementedError
 
     def resolve(self) -> "ExecBackend":
@@ -60,7 +73,7 @@ class ExecBackend:
 
 
 class OracleBackend(ExecBackend):
-    """Pure-jnp Algorithm-1 semantics (``ref.apsq_matmul_ref``)."""
+    """Pure-jnp semantics (``apsq_matmul.ref`` / ``int8_kv_attention.ref``)."""
 
     name = "oracle"
 
@@ -72,9 +85,15 @@ class OracleBackend(ExecBackend):
         return ref.apsq_matmul_ref(x_codes, w_codes, psum_exps,
                                    n_p=n_p, gs=gs)
 
+    def kv_attention(self, q, k_codes, v_codes, k_exp, v_exp, length, *,
+                     block_s):
+        from repro.kernels.int8_kv_attention import int8_kv_attention_ref
+        return int8_kv_attention_ref(q, k_codes, v_codes, k_exp, v_exp,
+                                     length)
+
 
 class PallasBackend(ExecBackend):
-    """The real Pallas kernel (interpret mode off-TPU, hardware on TPU).
+    """The real Pallas kernels (interpret mode off-TPU, hardware on TPU).
 
     ``interpret=None`` auto-selects (interpret unless running on TPU);
     pass ``interpret=True`` to force the interpreter (CI determinism).
@@ -96,6 +115,12 @@ class PallasBackend(ExecBackend):
         return apsq_matmul_int8(x_codes, w_codes, psum_exps, gs=gs,
                                 interpret=self.interpret)
 
+    def kv_attention(self, q, k_codes, v_codes, k_exp, v_exp, length, *,
+                     block_s):
+        from repro.kernels.int8_kv_attention import int8_kv_attention
+        return int8_kv_attention(q, k_codes, v_codes, k_exp, v_exp, length,
+                                 block_s=block_s, interpret=self.interpret)
+
 
 class AutoBackend(ExecBackend):
     """``pallas`` on TPU, ``oracle`` elsewhere (resolved at trace time)."""
@@ -109,6 +134,11 @@ class AutoBackend(ExecBackend):
 
     def int_gemm(self, x_codes, w_codes, psum_exps, *, gs):
         return self.resolve().int_gemm(x_codes, w_codes, psum_exps, gs=gs)
+
+    def kv_attention(self, q, k_codes, v_codes, k_exp, v_exp, length, *,
+                     block_s):
+        return self.resolve().kv_attention(q, k_codes, v_codes, k_exp,
+                                           v_exp, length, block_s=block_s)
 
 
 # ---------------------------------------------------------------------------
@@ -182,6 +212,44 @@ def execute_gemm(dq: DeployedQuantState, x: jax.Array, *,
     y = backend.int_gemm(xc, dq.w_codes, dq.psum_exps, gs=gs)
     scale = jnp.exp2((dq.ax_exp + dq.aw_exp).astype(jnp.float32))
     return (y.astype(jnp.float32) * scale).astype(x.dtype).reshape(out_shape)
+
+
+def kv_block_size(seq_len: int, requested: int = 512) -> int:
+    """Largest divisor of ``seq_len`` that is <= ``requested``.
+
+    The Pallas KV kernel tiles the cache sequence into ``block_s`` chunks
+    and requires an exact tiling; the oracle ignores it.  Paged caches
+    pass their page size, which divides the gathered sequence by
+    construction.
+    """
+    b = max(1, min(requested, seq_len))
+    while seq_len % b:
+        b -= 1
+    return b
+
+
+def execute_kv_attention(q: jax.Array, k_codes: jax.Array,
+                         v_codes: jax.Array, k_exp: jax.Array,
+                         v_exp: jax.Array, length: jax.Array, *,
+                         block_s: int | None = None,
+                         backend=None) -> jax.Array:
+    """Decode attention over an INT8 KV cache through the backend registry.
+
+    q: [B, Hq, hd] float; k_codes/v_codes: [B, S, Hkv, hd] int8 with
+    per-(batch, kv-head) PO2 exponents [B, Hkv] int32; ``length`` [B] (or
+    scalar) masks the valid cache prefix.  Returns [B, Hq, hd] in q's
+    dtype.  This is the second op family beside ``execute_gemm``: the
+    ``oracle`` backend runs the shape-polymorphic jnp reference, the
+    ``pallas`` backend the flash-decode TPU kernel (interpret off-TPU).
+    """
+    backend = get_backend(backend).resolve()
+    s = int(k_codes.shape[1])
+    block_s = kv_block_size(s, block_s if block_s is not None else 512)
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32),
+                              (k_codes.shape[0],))
+    return backend.kv_attention(
+        q, k_codes, v_codes, k_exp.astype(jnp.int32),
+        v_exp.astype(jnp.int32), length, block_s=block_s)
 
 
 def backend_parity_check(dq: DeployedQuantState, x: jax.Array, *,

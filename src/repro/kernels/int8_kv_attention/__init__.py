@@ -1,4 +1,11 @@
-"""INT8 KV-cache decode attention (PO2 shift scales) — Pallas kernel."""
+"""INT8 KV-cache decode attention (PO2 shift scales) — Pallas kernel.
+
+Served in production as the ``kv_attention`` exec op family
+(``repro.exec.execute_kv_attention``: ``oracle`` -> ``int8_kv_attention_ref``,
+``pallas`` -> ``int8_kv_attention``), which is how the paged serving
+engine's decode reads its cache — ``block_s`` there is the page size, so
+the gathered page view always tiles exactly.
+"""
 from .kernel import int8_kv_attention_kernel
 from .ops import cache_bytes, int8_kv_attention, int8_kv_attention_f32
 from .ref import (

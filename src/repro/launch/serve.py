@@ -1,8 +1,11 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> ...``.
 
-Spins up the continuous-batching engine on a (reduced or full) config and
+Spins up a continuous-batching engine on a (reduced or full) config and
 drives a synthetic request stream, reporting per-request outputs and
-decode-step throughput.
+decode-step throughput.  ``--engine paged`` serves through the paged
+INT8 KV cache (``PagedServingEngine``: page-pool scheduler with
+mid-decode eviction, attention reads via the ``kv_attention`` exec op
+family); the default ``dense`` engine keeps the float reference path.
 """
 from __future__ import annotations
 
@@ -21,12 +24,18 @@ def main():
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--engine", choices=("dense", "paged"), default="dense",
+                    help="dense float KV slots, or the paged INT8 KV "
+                         "cache with the continuous-batching scheduler")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--backend", default="auto",
+                    help="exec backend for integer ops: auto|oracle|pallas")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     from repro.configs import get_config, get_smoke
     from repro.models.model import init_lm
-    from repro.serving import Request, ServingEngine
+    from repro.serving import PagedServingEngine, Request, ServingEngine
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if cfg.encdec:
@@ -41,8 +50,15 @@ def main():
                     max_new_tokens=args.max_new_tokens)
             for i in range(args.requests)]
 
-    engine = ServingEngine(params, cfg, max_batch=args.max_batch,
-                           cache_len=args.cache_len)
+    if args.engine == "paged":
+        n_pages = args.cache_len // args.page_size * args.max_batch + 1
+        engine = PagedServingEngine(params, cfg, max_batch=args.max_batch,
+                                    page_size=args.page_size,
+                                    n_pages=n_pages, backend=args.backend)
+    else:
+        engine = ServingEngine(params, cfg, max_batch=args.max_batch,
+                               cache_len=args.cache_len,
+                               backend=args.backend)
     t0 = time.perf_counter()
     done = engine.run(reqs)
     dt = time.perf_counter() - t0

@@ -311,13 +311,19 @@ def attention_block(
     mesh=None,
     tap: list | None = None,
     backend=None,
+    page_table=None,
 ):
-    """Projections + RoPE + attention.  Two modes:
+    """Projections + RoPE + attention.  Three modes:
 
     * ``cache is None``: full-sequence (train / one-shot prefill); returns
       (out, kv) where kv = (k, v) for the caller to install into a cache.
     * ``cache = {"k":..., "v":...}``: single-token decode at ``pos``;
       returns (out, new_cache).
+    * ``cache = {"k_pages", "v_pages", "k_exp", "v_exp"}``: single-token
+      decode against the paged INT8 KV cache (``repro.serving.paged_cache``)
+      — ``pos`` is a per-slot [B] vector, ``page_table`` the [B, n_max]
+      physical page ids, and the attention read dispatches through the
+      ``repro.exec`` registry (``execute_kv_attention``).
 
     ``xkv`` (cross-attention): keys/values come from ``xkv`` instead of x,
     non-causal, no rope on kv by default (encoder output is position-free).
@@ -337,12 +343,26 @@ def attention_block(
     k = shard_hint(k, act_spec(mesh, B, heads=n_kv_heads))
     v = shard_hint(v, act_spec(mesh, B, heads=n_kv_heads))
 
+    paged = cache is not None and "k_pages" in cache
     if use_rope and xkv is None:
-        qpos = pos + jnp.arange(S)
+        if paged:  # per-slot positions: [B, 1] broadcasts over heads
+            qpos = jnp.reshape(jnp.asarray(pos, jnp.int32),
+                               (-1, 1)) + jnp.arange(S)
+        else:
+            qpos = pos + jnp.arange(S)
         q = apply_rope(q, qpos, fraction=rope_fraction, theta=rope_theta)
         k = apply_rope(k, qpos, fraction=rope_fraction, theta=rope_theta)
 
-    if cache is not None:  # decode
+    if paged:  # decode against the paged INT8 KV cache
+        if window is not None or softcap is not None:
+            raise NotImplementedError(
+                "paged INT8 KV decode serves full attention only "
+                "(no sliding window / softcap)")
+        from repro.serving.paged_cache import paged_update_and_attend
+        out, new_cache = paged_update_and_attend(
+            cache, q[:, 0], k, v, pos, page_table, backend=backend)
+        out = out[:, None]  # [B, Hq, hd] -> [B, 1, Hq, hd]
+    elif cache is not None:  # decode
         ring = window is not None
         kc, vc = update_kv_cache(cache["k"], cache["v"], k, v, pos, ring=ring)
         out = decode_attention(q, kc, vc, pos, window=window, ring=ring,

@@ -172,6 +172,7 @@ def apply_layer(
     causal: bool = True,
     tap: list | None = None,
     backend=None,
+    page_table=None,
 ):
     """One pre-norm block.  ``state`` not None => decode (single token).
 
@@ -180,6 +181,9 @@ def apply_layer(
     quantized linear (``repro.core.TapRecord`` per eager invocation).
     ``backend`` selects the integer execution backend (``repro.exec``)
     for deployed params and reaches every projection GEMM in the block.
+    ``page_table`` ([B, n_max] physical page ids) switches attention
+    layers whose state is a paged INT8 KV cache onto the paged decode
+    path (``pos`` is then a per-slot [B] vector).
     """
     # (§Perf it4, refuted: an explicit seq-shard constraint on the
     # residual stream added reshards — GSPMD already propagates SP from
@@ -190,14 +194,18 @@ def apply_layer(
 
     if kind in ("attn", "local"):
         window = cfg.local_window if kind == "local" else None
-        cache = ({"k": state["k"], "v": state["v"]}
-                 if state is not None else None)
+        if state is not None and "k_pages" in state:
+            cache = state  # paged INT8 pools + running exponents
+        elif state is not None:
+            cache = {"k": state["k"], "v": state["v"]}
+        else:
+            cache = None
         out, kv = attention_block(
             p["mix"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.hd, rope_fraction=cfg.rope_fraction,
             rope_theta=cfg.rope_theta, causal=causal, window=window,
             softcap=cfg.softcap, quant=quant, cache=cache, pos=pos,
-            mesh=mesh, tap=tap, backend=backend)
+            mesh=mesh, tap=tap, backend=backend, page_table=page_table)
         new_state = kv
     elif kind == "rwkv":
         out, tm_state = rwkv_time_mix(
@@ -276,14 +284,14 @@ def init_unit_state(cfg: ModelConfig, batch: int, cache_len: int) -> Params:
 
 def apply_unit(p: Params, x, *, cfg: ModelConfig, mesh=None, state=None,
                pos=0, enc_out=None, causal=True, tap: list | None = None,
-               backend=None):
+               backend=None, page_table=None):
     new_state = {}
     for i, kind in enumerate(cfg.block_pattern):
         x, s = apply_layer(
             p[str(i)], x, cfg=cfg, kind=kind, mesh=mesh,
             state=state[str(i)] if state is not None else None,
             pos=pos, enc_out=enc_out, causal=causal, tap=tap,
-            backend=backend)
+            backend=backend, page_table=page_table)
         new_state[str(i)] = s
     return x, new_state
 
@@ -581,6 +589,106 @@ def decode_step(
                            kind=cfg.block_pattern[i], mesh=mesh,
                            state=state[f"rem{i}"], pos=pos, enc_out=enc_out,
                            backend=backend)
+        new_state[f"rem{i}"] = s
+    logits = logits_from_hidden(p, cfg, x, mesh, backend=backend)
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (continuous-batching serving: INT8 pools + page table)
+# ---------------------------------------------------------------------------
+
+def init_paged_layer_state(cfg: ModelConfig, kind: str, batch: int,
+                           page_size: int, n_pages: int) -> Params:
+    """Fresh paged decode state for one layer.
+
+    Attention layers get shared INT8 page pools plus per-(slot, kv-head)
+    running PO2 exponents (``repro.serving.paged_cache``); recurrent kinds
+    keep their position-free per-slot states.  "local" (ring-buffer)
+    layers are not paged yet.
+    """
+    if kind == "attn":
+        from repro.serving.paged_cache import EXP_FLOOR
+        shape = (n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+        return {"k_pages": jnp.zeros(shape, jnp.int8),
+                "v_pages": jnp.zeros(shape, jnp.int8),
+                "k_exp": jnp.full((batch, cfg.n_kv_heads), EXP_FLOOR,
+                                  jnp.int32),
+                "v_exp": jnp.full((batch, cfg.n_kv_heads), EXP_FLOOR,
+                                  jnp.int32)}
+    if kind == "local":
+        raise NotImplementedError(
+            "paged serving does not cover local-attention layers yet")
+    return init_layer_state(cfg, kind, batch, cache_len=1)
+
+
+def init_paged_decode_state(cfg: ModelConfig, batch: int, *, page_size: int,
+                            n_pages: int) -> Params:
+    """Paged analogue of ``init_decode_state`` (same tree structure)."""
+    def unit_state():
+        return {str(i): init_paged_layer_state(cfg, kind, batch, page_size,
+                                               n_pages)
+                for i, kind in enumerate(cfg.block_pattern)}
+
+    state: Params = {}
+    if cfg.n_units:
+        if cfg.scan_layers:
+            state["units"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_units,) + a.shape),
+                unit_state())
+        else:
+            state["units"] = {f"u{i}": unit_state()
+                              for i in range(cfg.n_units)}
+    for i in range(cfg.n_rem):
+        state[f"rem{i}"] = init_paged_layer_state(
+            cfg, cfg.block_pattern[i], batch, page_size, n_pages)
+    return state
+
+
+def decode_step_paged(
+    p: Params,
+    cfg: ModelConfig,
+    state: Params,
+    token: jax.Array,
+    pos: jax.Array,
+    page_table: jax.Array,
+    *,
+    mesh=None,
+    backend=None,
+):
+    """One decode step over the paged INT8 KV cache.
+
+    Unlike ``decode_step``, ``pos`` is a per-slot [B] int32 vector (slots
+    advance independently under continuous batching) and ``page_table``
+    [B, n_max] maps each slot's logical pages to physical pool pages.
+    Returns (logits [B, 1, V], new_state)."""
+    x = jnp.take(p["embed"]["table"], token, axis=0)
+
+    new_state = dict(state)
+    if cfg.n_units:
+        if cfg.scan_layers:
+            def body(carry, xs):
+                unit_p, unit_s = xs
+                y, s = apply_unit(unit_p, carry, cfg=cfg, mesh=mesh,
+                                  state=unit_s, pos=pos, backend=backend,
+                                  page_table=page_table)
+                return y, s
+
+            x, new_units = jax.lax.scan(body, x, (p["units"], state["units"]))
+            new_state["units"] = new_units
+        else:
+            new_units = {}
+            for i in range(cfg.n_units):
+                x, s = apply_unit(p["units"][f"u{i}"], x, cfg=cfg, mesh=mesh,
+                                  state=state["units"][f"u{i}"], pos=pos,
+                                  backend=backend, page_table=page_table)
+                new_units[f"u{i}"] = s
+            new_state["units"] = new_units
+    for i in range(cfg.n_rem):
+        x, s = apply_layer(p["rem"][str(i)], x, cfg=cfg,
+                           kind=cfg.block_pattern[i], mesh=mesh,
+                           state=state[f"rem{i}"], pos=pos,
+                           backend=backend, page_table=page_table)
         new_state[f"rem{i}"] = s
     logits = logits_from_hidden(p, cfg, x, mesh, backend=backend)
     return logits, new_state

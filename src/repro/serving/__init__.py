@@ -1,9 +1,15 @@
-"""Serving: prefill/decode engine with batched requests, INT8 KV helpers."""
+"""Serving: continuous-batching engines (dense + paged INT8 KV cache)."""
 from .engine import (
+    PagedServingEngine,
     Request,
     ServingEngine,
     dequantize_kv,
     quantize_kv,
 )
+from .paged_cache import paged_cache_bytes
+from .scheduler import PageAllocator, Scheduler
 
-__all__ = ["Request", "ServingEngine", "dequantize_kv", "quantize_kv"]
+__all__ = [
+    "PageAllocator", "PagedServingEngine", "Request", "Scheduler",
+    "ServingEngine", "dequantize_kv", "paged_cache_bytes", "quantize_kv",
+]

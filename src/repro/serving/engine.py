@@ -1,4 +1,21 @@
-"""Serving engine: prefill/decode split with batched requests.
+"""Serving engines: prefill/decode split with continuous batching.
+
+Two engines share the Request/step/run host API:
+
+``ServingEngine`` — dense float KV caches, one [max_batch, cache_len]
+cache per attention layer.  The simple reference path.
+
+``PagedServingEngine`` — the production path: every attention layer's
+cache is a pool of fixed-size INT8 pages (``repro.serving.paged_cache``)
+with per-(slot, kv-head) power-of-two scales, shared by all request
+slots through a page table.  Pages are allocated on demand and reclaimed
+on finish/eviction by the host-side ``repro.serving.scheduler``; the
+attention read path is the ``kv_attention`` exec op family, i.e. the
+``kernels/int8_kv_attention`` flash-decode Pallas kernel on TPU and its
+jnp oracle elsewhere.  Because a slot's running exponents depend only on
+its own tokens, greedy decodes are token-identical regardless of which
+other requests share the pool — admission and eviction mid-decode never
+change anyone's output.
 
 Production pattern (vLLM-style, TPU-adapted):
   * fixed-shape request slots (``max_batch``) so every decode step hits the
@@ -8,10 +25,16 @@ Production pattern (vLLM-style, TPU-adapted):
     free slot — new requests join between decode steps (continuous
     batching);
   * decode advances ALL active slots one token per call (per-slot position
-    vector, vmapped over slots);
-  * finished slots are freed and re-usable;
-  * optional INT8 KV cache helpers (beyond-paper: APSQ-style PO2 scales
-    applied to cache pages — ``quantize_kv``/``dequantize_kv``).
+    vector);
+  * finished slots are freed and re-usable; requests stop on
+    ``max_new_tokens``, cache capacity, or their ``eos_token``;
+  * eviction (paged engine): when the page pool runs dry mid-decode the
+    latest-admitted request is preempted and requeued at the front; on
+    re-admission it re-prefills over prompt + generated tokens, which is
+    bit-identical to the uninterrupted decode because the prefill body IS
+    the decode body;
+  * standalone INT8 KV cache helpers (APSQ-style PO2 scales applied to
+    whole cache tensors — ``quantize_kv``/``dequantize_kv``).
 
 Integer serving (the calibrate -> export -> kernel-serving flow):
 
@@ -40,7 +63,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.model import decode_step, init_decode_state
+from repro.models.model import (
+    decode_step,
+    decode_step_paged,
+    init_decode_state,
+    init_paged_decode_state,
+)
 
 
 @dataclasses.dataclass
@@ -48,8 +76,13 @@ class Request:
     uid: int
     tokens: np.ndarray            # prompt
     max_new_tokens: int = 32
+    eos_token: int | None = None  # stop when this token is generated
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+
+    def hit_eos(self) -> bool:
+        return (self.eos_token is not None and len(self.out) > 0
+                and self.out[-1] == self.eos_token)
 
 
 # ---------------------------------------------------------------------------
@@ -197,13 +230,20 @@ class ServingEngine:
         self.slots[slot] = req
         self.pos[slot] = L
         req.out.append(int(jnp.argmax(logits[0])))
+        if len(req.out) >= req.max_new_tokens or req.hit_eos():
+            req.done = True  # finished on the prefill token; step() sweeps
         return True
 
     def step(self) -> list:
         """One decode step for every active slot; returns finished requests."""
+        finished = []
+        for i, r in enumerate(self.slots):  # finished at admission (eos etc.)
+            if r is not None and r.done:
+                finished.append(r)
+                self.slots[i] = None
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
-            return []
+            return finished
         tokens = np.zeros((self.max_batch, 1), np.int32)
         for i in active:
             tokens[i, 0] = self.slots[i].out[-1]
@@ -212,13 +252,13 @@ class ServingEngine:
             self.params, self.state, jnp.asarray(tokens),
             jnp.asarray(self.pos), sub)
         nxt = np.asarray(nxt)
-        finished = []
         for i in active:
             r = self.slots[i]
             r.out.append(int(nxt[i]))
             self.pos[i] += 1
             if (len(r.out) >= r.max_new_tokens
-                    or self.pos[i] >= self.cache_len - 1):
+                    or self.pos[i] >= self.cache_len - 1
+                    or r.hit_eos()):
                 r.done = True
                 finished.append(r)
                 self.slots[i] = None
@@ -232,4 +272,222 @@ class ServingEngine:
             while pending and self.add_request(pending[0]):
                 pending.pop(0)
             done.extend(self.step())
+        return done
+
+
+# ---------------------------------------------------------------------------
+# Paged engine (continuous batching over the INT8 page pool)
+# ---------------------------------------------------------------------------
+
+def _paged_axes_tree(state, scan_layers: bool = True):
+    """Per-leaf slot axis for the paged state tree.
+
+    Page pools (``k_pages``/``v_pages``) are shared by every slot and get
+    the sentinel -1 (pass whole / take whole); per-slot leaves (running
+    exponents, recurrent states) get their slot axis as in
+    ``_batch_axes_tree``."""
+    def f(path, a):
+        names = [str(getattr(p, "key", "")) for p in path]
+        if names and names[-1] in ("k_pages", "v_pages"):
+            return -1
+        return 1 if (scan_layers and "units" in names) else 0
+    return jax.tree_util.tree_map_with_path(f, state)
+
+
+class PagedServingEngine:
+    """Continuous-batching engine over the paged INT8 KV cache.
+
+    Same host API as ``ServingEngine`` (``Request`` in, ``step``/``run``
+    out) but requests are queued through the ``repro.serving.scheduler``:
+    admission waits for a slot + the prompt's pages, decode grows each
+    slot's page list on demand, and a dry pool preempts the
+    latest-admitted request (requeued at the front; resume re-prefills
+    prompt + generated and is bit-identical).  ``page_size`` doubles as
+    the attention kernel's ``block_s`` tile.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
+                 page_size: int = 16, n_pages: int = 128,
+                 max_pages_per_slot: int | None = None,
+                 prefill_chunk: int = 16, mesh=None, greedy: bool = True,
+                 temperature: float = 1.0, seed: int = 0, backend="auto"):
+        from repro.exec import get_backend
+        from .scheduler import Scheduler
+        if any(k == "local" for k in cfg.block_pattern) or cfg.softcap:
+            raise NotImplementedError(
+                "paged serving covers full-attention (+ recurrent) "
+                "layers only — no sliding-window / softcap yet")
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
+        self.mesh = mesh
+        self.greedy = greedy
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+        self.backend = get_backend(backend)
+
+        self.state = init_paged_decode_state(cfg, max_batch,
+                                             page_size=page_size,
+                                             n_pages=n_pages)
+        self.sched = Scheduler(max_slots=max_batch, n_pages=n_pages,
+                               page_size=page_size,
+                               max_pages_per_slot=max_pages_per_slot)
+        self.pos = np.zeros(max_batch, np.int32)      # next position per slot
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+
+    @classmethod
+    def from_exported(cls, params, cfg: ModelConfig, *, policy=None, **kw):
+        """Integer serving end-to-end: INT8 weights through the APSQ GEMM
+        kernel *and* INT8 KV pages through the flash-decode kernel."""
+        from repro.quant.export import export_quantized
+        deploy, _ = export_quantized(params, policy)
+        return cls(deploy, cfg, **kw)
+
+    # -- jitted bodies ------------------------------------------------------
+
+    def _prefill_impl(self, params, state, tokens, slot, length, table_row):
+        """Prefill one slot against the shared page pools.
+
+        The prefill body IS the decode body (``decode_step_paged`` over a
+        fresh per-slot state, pools taken live), scanned over the padded
+        prompt with updates masked beyond ``length`` — so a resumed
+        (preempted) request recomputes exactly the cache it lost."""
+        cfg = self.cfg
+        axes = _paged_axes_tree(state, cfg.scan_layers)
+        fresh = init_paged_decode_state(cfg, 1, page_size=self.page_size,
+                                        n_pages=1)  # pools unused
+        sub = jax.tree.map(lambda full, fr, ax: full if ax == -1 else fr,
+                           state, fresh, axes)
+
+        def body(carry, tok_pos):
+            st, lg = carry
+            tok, pos = tok_pos
+            lg2, st2 = decode_step_paged(params, cfg, st, tok[None, None],
+                                         pos[None], table_row,
+                                         mesh=self.mesh,
+                                         backend=self.backend)
+            valid = pos < length
+            st = jax.tree.map(lambda a, b: jnp.where(valid, b, a), st, st2)
+            lg = jnp.where(pos == length - 1, lg2[:, -1].astype(lg.dtype), lg)
+            return (st, lg), ()
+
+        lg0 = jnp.zeros((1, cfg.vocab), jnp.float32)
+        (st, lg), _ = jax.lax.scan(
+            body, (sub, lg0),
+            (tokens[0], jnp.arange(tokens.shape[1], dtype=jnp.int32)))
+        new_state = jax.tree.map(
+            lambda full, s, ax: s if ax == -1
+            else jax.lax.dynamic_update_slice_in_dim(
+                full, s.astype(full.dtype), slot, axis=ax),
+            state, st, axes)
+        return new_state, lg
+
+    def _decode_impl(self, params, state, tokens, pos, table, rng):
+        """One decode step for all slots.  tokens [B, 1]; pos [B];
+        table [B, n_max].  Pools are shared, so this is one batched
+        ``decode_step_paged`` (no vmap): inactive slots carry all-null
+        table rows and their writes land on the masked null page."""
+        logits, new_state = decode_step_paged(
+            params, self.cfg, state, tokens, pos, table, mesh=self.mesh,
+            backend=self.backend)
+        logits = logits[:, -1] / jnp.maximum(self.temperature, 1e-6)
+        if self.greedy:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            nxt = jax.random.categorical(rng, logits, axis=-1)
+        return nxt.astype(jnp.int32), new_state
+
+    # -- host API -----------------------------------------------------------
+
+    def add_request(self, req: Request) -> bool:
+        """Queue a request (admission happens inside ``step``)."""
+        self.sched.submit(req)
+        return True
+
+    def _admit(self) -> None:
+        """Admit queued requests while a slot + prompt pages are free."""
+        while True:
+            got = self.sched.admit_next()
+            if got is None:
+                return
+            slot, req, resume = got
+            L = int(len(resume))
+            pad = -L % self.prefill_chunk
+            toks = np.pad(resume, (0, pad))[None]
+            self.state, logits = self._prefill(
+                self.params, self.state, jnp.asarray(toks),
+                jnp.asarray(slot, jnp.int32), jnp.asarray(L, jnp.int32),
+                jnp.asarray(self.sched.table[slot:slot + 1]))
+            self.pos[slot] = L
+            req.out.append(int(jnp.argmax(logits[0])))
+            if len(req.out) >= req.max_new_tokens or req.hit_eos():
+                req.done = True  # swept by the caller before decode
+
+    def _ensure_capacity(self) -> list:
+        """Grow each active slot's page list for its next write; a dry
+        pool preempts latest-admitted requests until the write fits.
+        Returns slots finished by running out of page budget."""
+        finished = []
+        order = sorted(
+            (s for s, r in enumerate(self.sched.slots) if r is not None),
+            key=lambda s: self.sched._admitted_at[s])
+        for s in order:                               # oldest first
+            if self.sched.slots[s] is None:           # evicted below
+                continue
+            if int(self.pos[s]) >= self.sched.capacity_tokens:
+                r = self.sched.finish(s)              # page budget exhausted
+                r.done = True
+                finished.append(r)
+                continue
+            while not self.sched.grow(s, int(self.pos[s])):
+                victim = self.sched.evict_candidate()
+                if victim is None or victim == s:
+                    if victim == s:                   # newest = itself
+                        self.sched.preempt(s)
+                        break
+                    raise RuntimeError("page pool dry with no evictable slot")
+                self.sched.preempt(victim)
+        return finished
+
+    def step(self) -> list:
+        """One continuous-batching heartbeat: sweep finished, admit,
+        ensure pages (evicting if dry), decode every active slot."""
+        finished = []
+        self._admit()
+        for s, r in enumerate(self.sched.slots):
+            if r is not None and r.done:              # done on prefill token
+                finished.append(self.sched.finish(s))
+        finished.extend(self._ensure_capacity())
+        active = [s for s, r in enumerate(self.sched.slots) if r is not None]
+        if not active:
+            return finished
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for s in active:
+            tokens[s, 0] = self.sched.slots[s].out[-1]
+        self.rng, sub = jax.random.split(self.rng)
+        nxt, self.state = self._decode(
+            self.params, self.state, jnp.asarray(tokens),
+            jnp.asarray(self.pos), jnp.asarray(self.sched.table), sub)
+        nxt = np.asarray(nxt)
+        for s in active:
+            r = self.sched.slots[s]
+            r.out.append(int(nxt[s]))
+            self.pos[s] += 1
+            if len(r.out) >= r.max_new_tokens or r.hit_eos():
+                r.done = True
+                finished.append(self.sched.finish(s))
+        return finished
+
+    def run(self, requests: list) -> list:
+        """Continuous batching until every request completes."""
+        for r in requests:
+            self.sched.submit(r)
+        done: list = []
+        while self.sched.waiting or any(
+                s is not None for s in self.sched.slots):
+            done.extend(self.step())
+            self.sched.assert_invariants()
         return done

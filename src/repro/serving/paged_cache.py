@@ -1,0 +1,136 @@
+"""Paged INT8 KV cache: fixed-size PO2-scaled pages behind a page table.
+
+The cache for one attention layer is a *pool* of fixed-size pages,
+
+    k_pages / v_pages : int8  [n_pages, page_size, Hkv, hd]
+    k_exp  / v_exp    : int32 [max_slots, Hkv]
+
+shared by every request slot; a host-side page table (``[max_slots,
+pages_per_slot]`` physical page ids, see ``repro.serving.scheduler``) maps
+each slot's logical positions onto pool pages.  Page 0 is the reserved
+*null page*: unallocated table entries point at it, writes to it are junk
+and reads of it are always masked off by the valid length.
+
+Scales are powers of two per (slot, kv-head) — the paper's RAE shifter
+argument (§II-B) applied to the cache: dequantization is a shift, and
+growing the scale re-quantizes existing codes with an integer
+round-half-up right shift (``_shift_codes``), never a float pass.  The
+running exponent only ever grows, and it depends only on the slot's own
+tokens, so a request's decode is bit-identical regardless of which other
+requests share the pool — the property the continuous-batching parity
+tests pin down.
+
+The read path dispatches through the ``repro.exec`` backend registry
+(``execute_kv_attention``): the gathered page view is exactly the dense
+[B, S, Hkv, hd] layout the ``kernels/int8_kv_attention`` flash-decode
+kernel consumes, with ``block_s = page_size``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NULL_PAGE = 0
+# Fresh-slot exponent: 2^-24 scale.  Any real activation bumps it; codes
+# quantized at it are zero for all practical magnitudes.
+EXP_FLOOR = -24
+
+
+def po2_exponent(x: jax.Array) -> jax.Array:
+    """Smallest PO2 exponent whose 127-code range covers ``x``.
+
+    x: [B, S, Hkv, hd] -> int32 [B, Hkv] (reduced over positions + dims).
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(1, 3))
+    return jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30) / 127.0)).astype(
+        jnp.int32)
+
+
+def quantize_at(x: jax.Array, exp: jax.Array) -> jax.Array:
+    """Float [B, S, Hkv, hd] -> int8 codes at the PO2 scale 2^exp[B, Hkv]."""
+    scale = jnp.exp2(exp.astype(jnp.float32))[:, None, :, None]
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                    -127, 127).astype(jnp.int8)
+
+
+def _shift_codes(codes: jax.Array, shift: jax.Array) -> jax.Array:
+    """Re-quantize int8 codes to a coarser PO2 scale: round-half-up >> shift.
+
+    codes: [B, n_pages, P, Hkv, hd] int8; shift: [B, Hkv] int32 >= 0.
+    Matches the RAE's shift-with-rounding datapath — no float involved.
+    """
+    sh = shift[:, None, None, :, None]
+    c = codes.astype(jnp.int32)
+    half = jnp.where(sh > 0, 1 << jnp.maximum(sh - 1, 0), 0)
+    return jnp.clip((c + half) >> sh, -127, 127).astype(jnp.int8)
+
+
+def _update_pool(pages: jax.Array, exp: jax.Array, x_new: jax.Array,
+                 pos: jax.Array, page_table: jax.Array):
+    """Write one token per slot into the paged pool.
+
+    pages: [n_pages, P, Hkv, hd] int8; exp: [B, Hkv] int32 (running);
+    x_new: [B, 1, Hkv, hd] float; pos: [B] int32; page_table: [B, n_max].
+    Returns (pages', exp', gathered [B, n_max, P, Hkv, hd]) — the gathered
+    view already contains the new token, so the attention read reuses it.
+    """
+    page_size = pages.shape[1]
+    b_idx = jnp.arange(x_new.shape[0])
+    new_exp = jnp.maximum(exp, po2_exponent(x_new))
+    gathered = _shift_codes(pages[page_table], new_exp - exp)
+    codes = quantize_at(x_new, new_exp)            # [B, 1, Hkv, hd]
+    gathered = gathered.at[b_idx, pos // page_size,
+                           pos % page_size].set(codes[:, 0])
+    pages = pages.at[page_table].set(gathered)
+    return pages, new_exp, gathered
+
+
+def paged_update_and_attend(cache: dict, q: jax.Array, k_new: jax.Array,
+                            v_new: jax.Array, pos: jax.Array,
+                            page_table: jax.Array, *, backend=None):
+    """One decode step against the paged INT8 cache: write, then attend.
+
+    cache: {"k_pages", "v_pages" [n_pages, P, Hkv, hd] int8;
+            "k_exp", "v_exp" [B, Hkv] int32}
+    q: [B, Hq, hd] float; k_new/v_new: [B, 1, Hkv, hd] (roped already);
+    pos: [B] int32 (position being written); page_table: [B, n_max].
+
+    Returns (out [B, Hq, hd], new_cache).  The attention itself runs
+    through ``repro.exec.execute_kv_attention`` with ``block_s`` = the
+    page size, so the serving read path is the registered op family
+    (oracle jnp reference off-TPU, Pallas flash-decode kernel on TPU).
+    """
+    from repro.exec import execute_kv_attention
+    pos = jnp.asarray(pos, jnp.int32)
+    k_pages, k_exp, gk = _update_pool(cache["k_pages"], cache["k_exp"],
+                                      k_new, pos, page_table)
+    v_pages, v_exp, gv = _update_pool(cache["v_pages"], cache["v_exp"],
+                                      v_new, pos, page_table)
+    b, n_max, page_size = gk.shape[:3]
+    k_seq = gk.reshape(b, n_max * page_size, *gk.shape[3:])
+    v_seq = gv.reshape(b, n_max * page_size, *gv.shape[3:])
+    out = execute_kv_attention(q, k_seq, v_seq, k_exp, v_exp, pos + 1,
+                               block_s=page_size, backend=backend)
+    return out, {"k_pages": k_pages, "v_pages": v_pages,
+                 "k_exp": k_exp, "v_exp": v_exp}
+
+
+def paged_cache_bytes(cfg, *, n_pages: int, page_size: int,
+                      max_batch: int, cache_len: int) -> dict:
+    """Device bytes of the paged INT8 pools vs the dense f32/bf16 caches.
+
+    Counts every full-attention layer ("attn" kind) of ``cfg``; the dense
+    baseline is what ``init_decode_state`` allocates per slot.
+    """
+    n_attn = sum(1 for k in cfg.block_pattern if k == "attn")
+    n_attn *= cfg.n_units
+    n_attn += sum(1 for k in cfg.block_pattern[:cfg.n_rem] if k == "attn")
+    per_tok = cfg.n_kv_heads * cfg.hd * 2          # k and v
+    el = jnp.dtype(cfg.dtype).itemsize
+    return {
+        "int8_paged": n_attn * (n_pages * page_size * per_tok
+                                + max_batch * cfg.n_kv_heads * 2 * 4),
+        "dense_f32": n_attn * max_batch * cache_len * per_tok * 4,
+        "dense_native": n_attn * max_batch * cache_len * per_tok * el,
+        "n_attn_layers": n_attn,
+    }

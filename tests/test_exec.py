@@ -256,3 +256,54 @@ def test_engine_auto_backend_matches_oracle_on_cpu():
         outs[be] = eng.run([Request(uid=0, tokens=prompt,
                                     max_new_tokens=4)])[0].out
     assert outs["auto"] == outs["oracle"]
+
+
+# ---------------------------------------------------------------------------
+# kv_attention: the second op family
+# ---------------------------------------------------------------------------
+
+def test_kv_attention_op_family_backend_parity():
+    """execute_kv_attention dispatches per backend; oracle == pallas ==
+    auto (auto resolves to oracle on CPU) within interpret tolerance."""
+    from repro.exec import execute_kv_attention
+    from repro.kernels.int8_kv_attention import quantize_kv_po2
+
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (2, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 64, 2, 16))
+    kc, ke = quantize_kv_po2(k)
+    vc, ve = quantize_kv_po2(v)
+    L = jnp.asarray([17, 64], jnp.int32)
+    outs = {be: execute_kv_attention(q, kc, vc, ke, ve, L, block_s=32,
+                                     backend=be)
+            for be in ("oracle", "pallas", "auto")}
+    np.testing.assert_allclose(np.asarray(outs["pallas"]),
+                               np.asarray(outs["oracle"]),
+                               rtol=2e-5, atol=2e-6)
+    np.testing.assert_array_equal(np.asarray(outs["auto"]),
+                                  np.asarray(outs["oracle"]))
+
+
+def test_kv_attention_scalar_length_and_block_rounding():
+    """Scalar lengths broadcast; a non-dividing block_s is rounded down
+    to a divisor of S instead of erroring (kv_block_size)."""
+    from repro.exec import execute_kv_attention, kv_block_size
+    from repro.kernels.int8_kv_attention import quantize_kv_po2
+
+    assert kv_block_size(96, 512) == 96
+    assert kv_block_size(96, 64) == 48
+    assert kv_block_size(7, 4) == 1
+
+    key = jax.random.PRNGKey(10)
+    q = jax.random.normal(key, (1, 4, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 48, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 48, 2, 8))
+    kc, ke = quantize_kv_po2(k)
+    vc, ve = quantize_kv_po2(v)
+    a = execute_kv_attention(q, kc, vc, ke, ve, 20, block_s=20,
+                             backend="pallas")
+    b = execute_kv_attention(q, kc, vc, ke, ve,
+                             jnp.asarray([20], jnp.int32), backend="oracle")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-6)

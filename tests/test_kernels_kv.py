@@ -85,3 +85,40 @@ def test_quantize_roundtrip_po2():
 def test_cache_bytes_halved():
     b = cache_bytes(8, 32768, 4, 128)
     assert b["int8"] < b["bf16"] * 0.51
+
+
+@pytest.mark.parametrize("length", [32,   # exactly one block
+                                    33,   # length % block_s == 1
+                                    1,    # first position only
+                                    64])  # every block full
+def test_block_s_boundary_lengths(length):
+    """Valid-length mask at block edges: the online-softmax carry must
+    neither drop the last valid position nor admit the first masked one."""
+    q, k, v, _ = _case(2, 64, 4, 2, 16, seed=7)
+    kc, ke = quantize_kv_po2(k)
+    vc, ve = quantize_kv_po2(v)
+    L = jnp.full((2,), length, jnp.int32)
+    ref = int8_kv_attention_ref(q, kc, vc, ke, ve, L)
+    out = int8_kv_attention(q, kc, vc, ke, ve, L, block_s=32,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_ragged_lengths_across_batch():
+    """Every batch row at a different fill level (the continuous-batching
+    shape: slots admitted at different times), including block boundaries."""
+    q, k, v, _ = _case(4, 96, 4, 2, 16, seed=8)
+    kc, ke = quantize_kv_po2(k)
+    vc, ve = quantize_kv_po2(v)
+    L = jnp.asarray([1, 32, 33, 96], jnp.int32)
+    ref = int8_kv_attention_ref(q, kc, vc, ke, ve, L)
+    out = int8_kv_attention(q, kc, vc, ke, ve, L, block_s=32,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+    # rows are independent: rerunning row 0 alone reproduces its output
+    solo = int8_kv_attention(q[:1], kc[:1], vc[:1], ke[:1], ve[:1],
+                             L[:1], block_s=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(solo[0]), np.asarray(out[0]),
+                               rtol=1e-6, atol=1e-7)

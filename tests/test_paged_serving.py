@@ -1,0 +1,228 @@
+"""Paged INT8 KV serving: cache semantics, scheduler invariants, engine parity.
+
+The acceptance bar for the continuous-batching subsystem: greedy outputs
+of the batched ``PagedServingEngine`` are token-identical to the
+single-stream engine — under admission churn, a dry page pool with
+mid-decode eviction, and across exec backends (oracle vs interpret-mode
+Pallas).  The host-side scheduler never leaks a slot or a page.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models.model import init_lm
+from repro.serving import PagedServingEngine, Request
+from repro.serving.paged_cache import (
+    EXP_FLOOR,
+    NULL_PAGE,
+    paged_cache_bytes,
+    paged_update_and_attend,
+)
+from repro.serving.scheduler import PageAllocator, Scheduler
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab=128,
+                  dtype="float32")
+
+
+def _prompt(n, seed=0):
+    return ((np.arange(n) * 7 + seed * 13) % CFG.vocab).astype(np.int32)
+
+
+def _engine(params, **kw):
+    kw.setdefault("backend", "oracle")
+    kw.setdefault("prefill_chunk", 8)
+    return PagedServingEngine(params, CFG, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Paged cache semantics (device level)
+# ---------------------------------------------------------------------------
+
+def _fresh_cache(batch, n_pages, page_size, hkv, hd):
+    return {"k_pages": jnp.zeros((n_pages, page_size, hkv, hd), jnp.int8),
+            "v_pages": jnp.zeros((n_pages, page_size, hkv, hd), jnp.int8),
+            "k_exp": jnp.full((batch, hkv), EXP_FLOOR, jnp.int32),
+            "v_exp": jnp.full((batch, hkv), EXP_FLOOR, jnp.int32)}
+
+
+def test_paged_attend_tracks_fp_reference():
+    """Stream tokens through the paged cache; each step's output stays
+    within INT8-cache noise of exact fp attention over the same prefix."""
+    from repro.kernels.int8_kv_attention import fp_attention_ref
+    key = jax.random.PRNGKey(0)
+    T, hkv, hd, hq, P = 10, 2, 16, 4, 4
+    ks = jax.random.normal(key, (1, T, hkv, hd))
+    vs = jax.random.normal(jax.random.fold_in(key, 1), (1, T, hkv, hd))
+    qs = jax.random.normal(jax.random.fold_in(key, 2), (T, 1, hq, hd))
+    cache = _fresh_cache(1, 8, P, hkv, hd)
+    table = jnp.asarray([[1, 2, 3]])      # 3 pages = 12 positions
+    for t in range(T):
+        out, cache = paged_update_and_attend(
+            cache, qs[t], ks[:, t:t + 1], vs[:, t:t + 1],
+            jnp.asarray([t], jnp.int32), table, backend="oracle")
+        fp = fp_attention_ref(qs[t], ks[:, :t + 1], vs[:, :t + 1],
+                              jnp.asarray([t + 1], jnp.int32))
+        rel = float(jnp.mean(jnp.abs(out - fp)) /
+                    jnp.maximum(jnp.mean(jnp.abs(fp)), 1e-9))
+        assert rel < 0.06, (t, rel)
+    # running exponents cover the stream and never sit below the floor
+    assert int(jnp.min(cache["k_exp"])) > EXP_FLOOR
+
+
+def test_paged_cache_slot_isolated_from_pool_neighbors():
+    """A slot's output depends only on its own tokens: junk written by a
+    co-resident slot (different pages, own exponents) changes nothing —
+    the property that makes batched decode token-identical."""
+    key = jax.random.PRNGKey(1)
+    hkv, hd, hq, P = 2, 8, 4, 4
+    k1 = jax.random.normal(key, (1, 1, hkv, hd))
+    v1 = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, hkv, hd))
+    q1 = jax.random.normal(jax.random.fold_in(key, 2), (1, hq, hd))
+
+    solo = _fresh_cache(1, 8, P, hkv, hd)
+    out_solo, _ = paged_update_and_attend(
+        solo, q1, k1, v1, jnp.asarray([0]), jnp.asarray([[1]]),
+        backend="oracle")
+
+    both = _fresh_cache(2, 8, P, hkv, hd)
+    k2 = jnp.concatenate([k1, k1 * 100.0])   # neighbor with huge scale
+    v2 = jnp.concatenate([v1, v1 * 100.0])
+    q2 = jnp.concatenate([q1, q1])
+    out_both, _ = paged_update_and_attend(
+        both, q2, k2, v2, jnp.asarray([0, 5]), jnp.asarray([[1], [2]]),
+        backend="oracle")
+    np.testing.assert_array_equal(np.asarray(out_solo[0]),
+                                  np.asarray(out_both[0]))
+
+
+def test_paged_cache_bytes_accounting():
+    b = paged_cache_bytes(CFG, n_pages=33, page_size=16, max_batch=8,
+                          cache_len=64)
+    assert b["n_attn_layers"] == CFG.n_layers
+    assert b["int8_paged"] < b["dense_f32"]
+
+
+# ---------------------------------------------------------------------------
+# Scheduler (host level)
+# ---------------------------------------------------------------------------
+
+def test_page_allocator_conserved_under_churn():
+    alloc = PageAllocator(17)
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        slot = int(rng.integers(0, 4))
+        if rng.random() < 0.6:
+            alloc.alloc(slot, int(rng.integers(1, 4)))
+        else:
+            alloc.release(slot)
+        alloc.assert_conserved()
+    for s in range(4):
+        alloc.release(s)
+    alloc.assert_conserved()
+    assert alloc.n_free == 16           # every page back, page 0 reserved
+    assert NULL_PAGE == 0
+
+
+def test_scheduler_no_leak_after_evict_and_finish():
+    sched = Scheduler(max_slots=2, n_pages=9, page_size=4)
+    for i in range(3):
+        sched.submit(Request(uid=i, tokens=np.arange(6), max_new_tokens=4))
+    s0, r0, _ = sched.admit_next()
+    s1, r1, _ = sched.admit_next()
+    assert sched.admit_next() is None   # no free slot
+    sched.assert_invariants()
+    assert sched.grow(s0, 8)            # next page for slot 0
+    victim = sched.evict_candidate()
+    assert victim == s1                 # latest admitted
+    sched.preempt(victim)
+    sched.assert_invariants()
+    assert sched.waiting[0].uid == r1.uid   # requeued at the front
+    assert sched.table[victim].tolist() == [NULL_PAGE] * sched.table.shape[1]
+    sched.finish(s0)
+    sched.assert_invariants()
+    assert sched.alloc.n_free == 8      # all pages back
+
+    # a request that can never fit is rejected up front
+    with pytest.raises(ValueError):
+        sched.submit(Request(uid=9, tokens=np.arange(40),
+                             max_new_tokens=40))
+
+
+# ---------------------------------------------------------------------------
+# Engine parity (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def params():
+    return init_lm(jax.random.PRNGKey(0), CFG)
+
+
+def _single_stream(params, req_spec):
+    eng = _engine(params, max_batch=1, page_size=4, n_pages=32)
+    outs = {}
+    for uid, toks, n in req_spec:
+        r = Request(uid=uid, tokens=toks, max_new_tokens=n)
+        eng.run([r])
+        outs[uid] = r.out
+    return outs
+
+
+def test_batched_matches_single_stream(params):
+    spec = [(i, _prompt(4 + i, seed=i), 6) for i in range(6)]
+    single = _single_stream(params, spec)
+    eng = _engine(params, max_batch=3, page_size=4, n_pages=32)
+    done = eng.run([Request(uid=u, tokens=t, max_new_tokens=n)
+                    for u, t, n in spec])
+    assert {r.uid: r.out for r in done} == single
+    eng.sched.assert_invariants()
+
+
+def test_eviction_mid_decode_keeps_outputs_identical(params):
+    """Pool far too small for 4 concurrent slots: requests get preempted
+    mid-decode and resumed, yet every output matches the roomy engine."""
+    spec = [(i, _prompt(5 + i, seed=i), 8) for i in range(4)]
+    single = _single_stream(params, spec)
+    eng = _engine(params, max_batch=4, page_size=4, n_pages=10)
+    done = eng.run([Request(uid=u, tokens=t, max_new_tokens=n)
+                    for u, t, n in spec])
+    assert eng.sched.stats.preempted > 0, "pool was not small enough"
+    assert {r.uid: r.out for r in done} == single
+    eng.sched.assert_invariants()
+    assert eng.sched.alloc.n_free == 9  # every page reclaimed
+
+
+def test_paged_eos_token_stops_stream(params):
+    probe = Request(uid=0, tokens=_prompt(6), max_new_tokens=6)
+    _engine(params, max_batch=1, page_size=8, n_pages=16).run([probe])
+    eos = probe.out[2]
+    r = Request(uid=1, tokens=_prompt(6), max_new_tokens=50, eos_token=eos)
+    _engine(params, max_batch=1, page_size=8, n_pages=16).run([r])
+    expect = probe.out[:probe.out.index(eos) + 1]  # first occurrence stops
+    assert r.out == expect and r.done
+
+
+def test_paged_engine_pallas_matches_oracle(params):
+    from repro.exec import PallasBackend
+    spec = [(0, _prompt(6), 5), (1, _prompt(9, seed=2), 5)]
+    outs = {}
+    for be in ("oracle", PallasBackend(interpret=True)):
+        eng = _engine(params, max_batch=2, page_size=8, n_pages=16,
+                      backend=be)
+        done = eng.run([Request(uid=u, tokens=t, max_new_tokens=n)
+                        for u, t, n in spec])
+        outs[str(be)] = {r.uid: r.out for r in done}
+    vals = list(outs.values())
+    assert vals[0] == vals[1]
+
+
+def test_local_window_arch_rejected():
+    cfg = ModelConfig(name="lw", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab=64,
+                      dtype="float32", block_pattern=("local", "attn"),
+                      local_window=8)
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(NotImplementedError):
+        PagedServingEngine(p, cfg, max_batch=1)

@@ -62,6 +62,30 @@ def test_engine_varied_prompt_lengths_same_compile_bucket():
         assert done[0].out == ref
 
 
+def test_engine_eos_token_stops_stream():
+    """A stream with ``eos_token`` stops the moment it generates it,
+    even though ``max_new_tokens`` would allow far more."""
+    params = init_lm(jax.random.PRNGKey(1), CFG)
+    prompt = np.arange(6) % 128
+    probe = Request(uid=0, tokens=prompt, max_new_tokens=6)
+    ServingEngine(params, CFG, max_batch=1, cache_len=64,
+                  prefill_chunk=8).run([probe])
+    eos = probe.out[2]
+    r = Request(uid=1, tokens=prompt, max_new_tokens=50, eos_token=eos)
+    done = ServingEngine(params, CFG, max_batch=1, cache_len=64,
+                         prefill_chunk=8).run([r])
+    expect = probe.out[:probe.out.index(eos) + 1]  # first occurrence stops
+    assert done[0].out == expect and done[0].done
+    # eos on the very first (prefill) token frees the slot immediately
+    r2 = Request(uid=2, tokens=prompt, max_new_tokens=50,
+                 eos_token=probe.out[0])
+    eng = ServingEngine(params, CFG, max_batch=1, cache_len=64,
+                        prefill_chunk=8)
+    done2 = eng.run([r2])
+    assert done2[0].out == probe.out[:1]
+    assert eng.slots == [None]
+
+
 def test_int8_kv_roundtrip():
     x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, 4, 8))
     codes, scale = quantize_kv(x)
