@@ -1,0 +1,81 @@
+"""Gate a fresh kernel_bench run against the checked-in throughput floor.
+
+CI's kernel-backend job runs ``kernel_bench --smoke --json`` and then this
+script with the floor extracted from the committed ``BENCH_kernel.json``
+(``git show HEAD:BENCH_kernel.json``).  Backend records are matched on
+(shape, m, k, n); each match must keep ``bit_equal`` true and hold
+``pallas_gmacs_per_s`` at or above ``floor * slack``.  Interpret-mode
+wall-clock on a shared CI box is noisy, so the default slack is generous —
+the gate exists to catch order-of-magnitude launch-geometry regressions
+(e.g. the 8x128 block cap this repo used to ship), not 10% jitter.
+
+Exit codes: 0 pass, 1 regression, 2 usage/IO error.  No overlapping
+records is a warning, not a failure (a floor from before a shape existed
+cannot gate it).
+"""
+import argparse
+import json
+import sys
+
+
+def _backend_records(payload: dict) -> dict:
+    out = {}
+    for rec in payload.get("records", []):
+        if rec.get("section") != "backend":
+            continue
+        key = (rec.get("shape"), rec.get("m"), rec.get("k"), rec.get("n"))
+        out[key] = rec
+    return out
+
+
+def check(new: dict, floor: dict, slack: float, print_fn=print) -> int:
+    new_recs = _backend_records(new)
+    floor_recs = _backend_records(floor)
+    overlap = sorted(set(new_recs) & set(floor_recs))
+    if not overlap:
+        print_fn("floor,WARN,no overlapping backend records — nothing to "
+                 "gate (floor predates these shapes?)")
+        return 0
+    failures = 0
+    for key in overlap:
+        shape, m, k, n = key
+        rec, ref = new_recs[key], floor_recs[key]
+        got = rec.get("pallas_gmacs_per_s", 0.0)
+        need = ref.get("pallas_gmacs_per_s", 0.0) * slack
+        equal = bool(rec.get("bit_equal", False))
+        ok = equal and got >= need
+        print_fn(f"floor,{'ok' if ok else 'FAIL'},{shape},m={m},k={k},n={n},"
+                 f"pallas_gmacs_per_s={got} (floor*slack={need:.3f}),"
+                 f"bit_equal={equal}")
+        failures += 0 if ok else 1
+    if failures:
+        print_fn(f"floor,FAIL,{failures}/{len(overlap)} records below the "
+                 f"checked-in throughput floor")
+        return 1
+    print_fn(f"floor,pass,{len(overlap)} records at or above floor")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new_json", help="fresh kernel_bench --json output")
+    ap.add_argument("floor_json",
+                    help="committed BENCH_kernel.json to gate against")
+    ap.add_argument("--slack", type=float, default=0.25,
+                    help="required fraction of the floor throughput "
+                         "(default 0.25: flag >4x regressions, tolerate "
+                         "shared-box timing noise)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.new_json) as f:
+            new = json.load(f)
+        with open(args.floor_json) as f:
+            floor = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"floor,ERROR,{e}")
+        return 2
+    return check(new, floor, args.slack)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.exec import PallasBackend
+from repro.kernels import autotune
 from repro.models.model import init_lm
 from repro.serving import PagedServingEngine, Request, paged_cache_bytes
 
@@ -178,10 +179,24 @@ def run_load(params, cfg, *, n_streams, max_batch, arrival_rate,
     return total_tokens
 
 
+def run_kernel_blocks(print_fn=print, records: list | None = None):
+    """Record the launch geometry the serving engines' Pallas GEMMs will
+    resolve per shape class — so a BENCH_serving.json diff shows when a
+    tuned cache (or a heuristic change) moved the serving block shapes."""
+    table = autotune.resolved_table()
+    for cls, cfg in table.items():
+        print_fn(f"serving,kernel_blocks,{cls},bm={cfg['block_m']},"
+                 f"bn={cfg['block_n']},{cfg['exp_layout']},"
+                 f"{cfg['blocks_source']}")
+    if records is not None:
+        records.append({"section": "kernel_blocks", **table})
+
+
 def run(print_fn=print, smoke: bool = False, records: list | None = None,
         seed: int = 0):
     cfg = get_smoke("tinyllama-1.1b")
     params = init_lm(jax.random.PRNGKey(0), cfg)
+    run_kernel_blocks(print_fn, records)
     run_parity(params, cfg, print_fn, records)
     if smoke:  # the CI cell: 64 concurrent streams, oracle numbers
         run_load(params, cfg, n_streams=64, max_batch=64, arrival_rate=8.0,

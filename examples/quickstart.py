@@ -20,6 +20,18 @@
    per-layer (gs, n_p) policies on energy x accuracy, and returns the
    Pareto front.  Full loop:
    ``python -m repro.search.cli --arch tinyllama-1.1b --budget-smoke``.
+
+Block autotuning: every Pallas launch resolves its (block_m, block_n,
+exponent layout) per shape class through ``repro.kernels.autotune`` —
+decode (M=1) takes a single-row fast-path kernel, prefill gets large
+MXU-aligned tiles, MoE expert banks run one fused grid over all experts.
+The default is a static heuristic (nothing is ever timed at trace time);
+``PYTHONPATH=src python -m repro.kernels.autotune`` measures the real
+candidates on this host and caches winners in
+``~/.cache/repro-apsq/autotune-v1.json`` (override with
+``$REPRO_AUTOTUNE_CACHE``), after which every kernel launch — including
+the serving engines below — picks them up automatically.
+``python -m repro.kernels.autotune --show`` prints the resolved table.
 """
 import jax
 import jax.numpy as jnp

@@ -4,11 +4,16 @@
 #   scripts/ci.sh                 tier-1: full test suite (extra args -> pytest)
 #   scripts/ci.sh kernel-backend  interpret-mode kernel-backend job: the
 #                                 kernel-vs-oracle parity grid + exec-backend
-#                                 tests + a kernel_bench --smoke pass (with
-#                                 the machine-readable BENCH_kernel.json so
-#                                 the perf trajectory is tracked per run),
-#                                 so kernel regressions fail fast and in
-#                                 isolation from the (slower) tier-1 run.
+#                                 + block-autotuner tests + a kernel_bench
+#                                 --smoke pass (with the machine-readable
+#                                 BENCH_kernel.json so the perf trajectory
+#                                 is tracked per run).  The fresh run is
+#                                 then gated against the committed
+#                                 BENCH_kernel.json throughput floor
+#                                 (benchmarks/check_kernel_floor.py), so
+#                                 both parity AND launch-geometry perf
+#                                 regressions fail fast, in isolation from
+#                                 the (slower) tier-1 run.
 #   scripts/ci.sh search          policy-search smoke: 2-iteration (gs, n_p)
 #                                 co-exploration on the tiny arch; fails
 #                                 unless the Pareto front is non-empty with
@@ -34,9 +39,20 @@ python -m pip install --quiet "jax>=0.4.30" numpy 2>/dev/null || true
 
 if [[ "${1:-}" == "kernel-backend" ]]; then
     shift
-    python -m pytest -q tests/test_kernels.py tests/test_exec.py "$@"
+    python -m pytest -q tests/test_kernels.py tests/test_exec.py \
+        tests/test_autotune.py "$@"
+    # Save the committed floor BEFORE the bench overwrites BENCH_kernel.json.
+    floor="$(mktemp)"
+    git show HEAD:BENCH_kernel.json > "$floor" 2>/dev/null || floor=""
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m benchmarks.kernel_bench --smoke --json BENCH_kernel.json
+    if [[ -n "$floor" ]]; then
+        PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+            python -m benchmarks.check_kernel_floor BENCH_kernel.json "$floor"
+        rm -f "$floor"
+    else
+        echo "floor,WARN,no committed BENCH_kernel.json — floor gate skipped"
+    fi
 elif [[ "${1:-}" == "search" ]]; then
     shift
     python -m pytest -q tests/test_search.py "$@"

@@ -25,8 +25,6 @@ on a single code path.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 
@@ -57,6 +55,23 @@ class ExecBackend:
     def int_gemm(self, x_codes: jax.Array, w_codes: jax.Array,
                  psum_exps: jax.Array | None, *, gs: int) -> jax.Array:
         raise NotImplementedError
+
+    def int_expert_gemm(self, x_codes: jax.Array, w_codes: jax.Array,
+                        psum_exps: jax.Array | None, *,
+                        gs: int) -> jax.Array:
+        """Stacked expert-bank GEMM: [E, M, K] @ [E, K, N] -> [E, M, N].
+
+        Default semantics: E independent ``int_gemm`` calls (the
+        reference unrolled form).  Backends that can fuse the expert
+        axis into one launch override this — the Pallas backend serves
+        all experts from a single ``pallas_call`` grid.
+        """
+        n_exp = int(x_codes.shape[0])
+        return jnp.stack([
+            self.int_gemm(
+                x_codes[e], w_codes[e],
+                None if psum_exps is None else psum_exps[e], gs=gs)
+            for e in range(n_exp)])
 
     def kv_attention(self, q: jax.Array, k_codes: jax.Array,
                      v_codes: jax.Array, k_exp: jax.Array,
@@ -97,23 +112,59 @@ class PallasBackend(ExecBackend):
 
     ``interpret=None`` auto-selects (interpret unless running on TPU);
     pass ``interpret=True`` to force the interpreter (CI determinism).
+
+    Launch geometry comes from ``repro.kernels.autotune``: every GEMM
+    resolves (block_m, block_n, exponent layout) per shape class —
+    cached tuned winners when ``python -m repro.kernels.autotune`` (or
+    ``kernel_bench --tune``) has run on this host, the static heuristic
+    otherwise.  ``block_overrides`` pins configs per shape class
+    (e.g. ``{"decode_m1": BlockConfig(1, 512)}``) ahead of both.
     """
 
     name = "pallas"
 
-    def __init__(self, interpret: bool | None = None):
+    def __init__(self, interpret: bool | None = None,
+                 block_overrides: dict | None = None):
         self.interpret = interpret
+        self.block_overrides = dict(block_overrides or {})
+
+    def _blocks(self, m: int, *, expert: bool = False):
+        """(block_m, block_n, exp_layout) or (None, None, None) to let
+        ops.py resolve through the autotune table."""
+        from repro.kernels import autotune
+        cfg = self.block_overrides.get(
+            autotune.shape_class(m, expert=expert))
+        if cfg is None:
+            return None, None, None
+        return cfg.block_m, cfg.block_n, cfg.exp_layout
 
     def int_gemm(self, x_codes, w_codes, psum_exps, *, gs):
         from repro.kernels.apsq_matmul import (
             apsq_matmul_int8,
             baseline_matmul_int8,
         )
+        bm, bn, layout = self._blocks(int(x_codes.shape[0]))
         if psum_exps is None:
             return baseline_matmul_int8(x_codes, w_codes, n_p=1,
+                                        block_m=bm, block_n=bn,
                                         interpret=self.interpret)
         return apsq_matmul_int8(x_codes, w_codes, psum_exps, gs=gs,
+                                block_m=bm, block_n=bn, exp_layout=layout,
                                 interpret=self.interpret)
+
+    def int_expert_gemm(self, x_codes, w_codes, psum_exps, *, gs):
+        from repro.kernels.apsq_matmul import (
+            apsq_expert_matmul_int8,
+            baseline_expert_matmul_int8,
+        )
+        bm, bn, _ = self._blocks(int(x_codes.shape[1]), expert=True)
+        if psum_exps is None:
+            return baseline_expert_matmul_int8(
+                x_codes, w_codes, n_p=1, block_m=bm, block_n=bn,
+                interpret=self.interpret)
+        return apsq_expert_matmul_int8(
+            x_codes, w_codes, psum_exps, gs=gs, block_m=bm, block_n=bn,
+            interpret=self.interpret)
 
     def kv_attention(self, q, k_codes, v_codes, k_exp, v_exp, length, *,
                      block_s):
@@ -134,6 +185,10 @@ class AutoBackend(ExecBackend):
 
     def int_gemm(self, x_codes, w_codes, psum_exps, *, gs):
         return self.resolve().int_gemm(x_codes, w_codes, psum_exps, gs=gs)
+
+    def int_expert_gemm(self, x_codes, w_codes, psum_exps, *, gs):
+        return self.resolve().int_expert_gemm(x_codes, w_codes, psum_exps,
+                                              gs=gs)
 
     def kv_attention(self, q, k_codes, v_codes, k_exp, v_exp, length, *,
                      block_s):
@@ -286,20 +341,35 @@ def backend_parity_check(dq: DeployedQuantState, x: jax.Array, *,
 
 def execute_expert_gemm(dq: DeployedQuantState, x: jax.Array, *,
                         backend=None) -> jax.Array:
-    """Per-expert deployed GEMM: x [E, C, K] against stacked codes.
+    """Stacked expert-bank GEMM: x [E, C, K] against per-expert codes.
 
     ``dq`` carries a leading expert axis on every data leaf (w_codes
     [E, K, N], ax_exp [E], aw_exp [E, ...], psum_exps [E, n_p, ...] — the
-    per-expert exponent banks emitted by ``export_quantized``).  Experts
-    are unrolled (E is static and the per-expert shapes are identical, so
-    each expert reuses one compiled kernel specialization).
+    per-expert exponent banks emitted by ``export_quantized``).  All E
+    experts execute as ONE backend op: activations quantize per expert
+    (vmapped PO2 shifts), the backend's ``int_expert_gemm`` runs the
+    stacked integer GEMM — a single fused ``pallas_call`` whose grid
+    carries the expert axis on the Pallas backend, E oracle calls on the
+    reference backend — and the INT32 outputs rescale per expert by
+    ``2^(ax_exp[e] + aw_exp[e])``.  Bit-identical to slicing expert ``e``
+    out of ``dq`` and calling ``execute_gemm`` on it (tests enforce).
     """
+    backend = get_backend(backend).resolve()
+    spec = dq.spec or QuantConfig.w8a8()
     n_exp = int(dq.w_codes.shape[0])
-    outs = []
-    for e in range(n_exp):
-        dqe = dataclasses.replace(
-            dq, w_codes=dq.w_codes[e], ax_exp=dq.ax_exp[e],
-            aw_exp=dq.aw_exp[e],
-            psum_exps=None if dq.psum_exps is None else dq.psum_exps[e])
-        outs.append(execute_gemm(dqe, x[e], backend=backend))
-    return jnp.stack(outs)
+    k = int(dq.w_codes.shape[-2])
+    out_shape = x.shape[:-1] + dq.out_dims
+    xc = jax.vmap(
+        lambda xe, ae: quantize_activations(xe.reshape(-1, k), ae,
+                                            spec.a_bits)
+    )(x, dq.ax_exp)
+    gs = 1
+    if dq.psum_exps is not None:
+        n_p = int(dq.psum_exps.shape[1])
+        gs = n_p if spec.psum.mode == "psq" else spec.psum.gs
+    y = backend.int_expert_gemm(xc, dq.w_codes, dq.psum_exps, gs=gs)
+    aw = dq.aw_exp
+    aw = aw.reshape(n_exp, 1, -1) if aw.ndim > 1 else aw.reshape(n_exp, 1, 1)
+    scale = jnp.exp2((dq.ax_exp.reshape(n_exp, 1, 1) + aw)
+                     .astype(jnp.float32))
+    return (y.astype(jnp.float32) * scale).astype(x.dtype).reshape(out_shape)

@@ -1,12 +1,17 @@
 """APSQ matmul Pallas kernel: W8A8 GEMM with INT8 PSUM banks (RAE on TPU)."""
 from .kernel import (
     accumulator_vmem_bytes,
+    apsq_expert_matmul_kernel,
     apsq_matmul_kernel,
+    apsq_matmul_m1_kernel,
+    baseline_expert_matmul_kernel,
     baseline_matmul_kernel,
 )
 from .ops import (
+    apsq_expert_matmul_int8,
     apsq_matmul_f32,
     apsq_matmul_int8,
+    baseline_expert_matmul_int8,
     baseline_matmul_int8,
     calibrate_exps,
     quantize_operands,
@@ -23,8 +28,11 @@ from .ref import (
 )
 
 __all__ = [
-    "accumulator_vmem_bytes", "apsq_matmul_kernel", "baseline_matmul_kernel",
-    "apsq_matmul_f32", "apsq_matmul_int8", "baseline_matmul_int8",
+    "accumulator_vmem_bytes", "apsq_expert_matmul_kernel",
+    "apsq_matmul_kernel", "apsq_matmul_m1_kernel",
+    "baseline_expert_matmul_kernel", "baseline_matmul_kernel",
+    "apsq_expert_matmul_int8", "apsq_matmul_f32", "apsq_matmul_int8",
+    "baseline_expert_matmul_int8", "baseline_matmul_int8",
     "calibrate_exps", "quantize_operands", "apsq_matmul_ref",
     "baseline_matmul_ref", "choose_exps", "dequantize_psum", "pad_ragged_k",
     "psum_tiles", "quantize_psum", "rshift_round",

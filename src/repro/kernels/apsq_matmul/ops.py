@@ -1,7 +1,15 @@
-"""Jit'd public wrappers around the APSQ Pallas kernel.
+"""Jit'd public wrappers around the APSQ Pallas kernels.
 
 Handles padding to block multiples, interpret-mode fallback on CPU, operand
 quantization from float, and rescaling of the integer result back to float.
+
+Block sizes: every entry point takes ``block_m``/``block_n`` (and, where
+2-D exponents are in play, ``exp_layout``).  Left as ``None`` they resolve
+through ``repro.kernels.autotune.get_block_config`` — the per-shape-class
+cache of tuned winners with a static heuristic fallback — so callers get
+shape-appropriate launch geometry (m=1 decode fast path, large prefill
+tiles, fused expert blocks) without naming blocks anywhere.  Explicit
+values are respected, clamped to the padded operand dims.
 """
 from __future__ import annotations
 
@@ -10,8 +18,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .. import autotune
 from . import ref
-from .kernel import apsq_matmul_kernel, baseline_matmul_kernel
+from .kernel import (
+    apsq_expert_matmul_kernel,
+    apsq_matmul_kernel,
+    apsq_matmul_m1_kernel,
+    baseline_expert_matmul_kernel,
+    baseline_matmul_kernel,
+)
 
 
 def _default_interpret() -> bool:
@@ -26,14 +41,40 @@ def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
     return x
 
 
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _resolve_blocks(m, k, n, *, n_p, gs, block_m, block_n, exp_layout=None,
+                    expert=False):
+    """Fill in unset block params from the autotune table, then clamp to
+    the padded operand dims (a block never exceeds what one tile covers)."""
+    cfg = None
+    if block_m is None or block_n is None or exp_layout is None:
+        cfg = autotune.get_block_config(m, k, n, n_p=n_p, gs=gs,
+                                        expert=expert)
+    bm = cfg.block_m if block_m is None else block_m
+    bn = cfg.block_n if block_n is None else block_n
+    layout = (cfg.exp_layout if cfg is not None else "blocked") \
+        if exp_layout is None else exp_layout
+    if bm != 1:
+        bm = max(1, min(bm, _round_up(m, 8)))
+    if n < 128:  # unit-test shapes: one lane tile, no column padding
+        bn = n
+    else:
+        bn = max(128, min(bn, _round_up(n, 128)))
+    return bm, bn, layout
+
+
 def apsq_matmul_int8(
     x_codes: jax.Array,
     w_codes: jax.Array,
     exps: jax.Array,
     *,
     gs: int,
-    block_m: int = 128,
-    block_n: int = 128,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    exp_layout: str | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """INT8 GEMM with Algorithm-1 PSUM handling; returns INT32 [M, N].
@@ -42,24 +83,118 @@ def apsq_matmul_int8(
     handled by zero-padding K into a remainder PSUM group (zero codes
     contribute nothing to the final tile's partial sum).  ``exps`` is
     [n_p] (per-tensor) or [n_p, N] (per-channel weight scales).
+
+    M == 1 with an unpinned ``block_m`` takes the decode fast path
+    (``apsq_matmul_m1_kernel``: one grid row over N, the whole K
+    reduction unrolled in-register) — bit-identical to the generic grid.
     """
     if interpret is None:
         interpret = _default_interpret()
     m, k = x_codes.shape
     n = w_codes.shape[1]
     n_p = int(exps.shape[0])
+    bm, bn, layout = _resolve_blocks(m, k, n, n_p=n_p, gs=gs,
+                                     block_m=block_m, block_n=block_n,
+                                     exp_layout=exp_layout)
     x_codes, w_codes = ref.pad_ragged_k(x_codes, w_codes, n_p)
-    bm, bn = min(block_m, _ceil_mult(m, 8)), min(block_n, _ceil_mult(n, 128))
-    xp = _pad_to(x_codes, bm, 1)
-    wp = _pad_to(w_codes, 1, bn)
     exps = exps.astype(jnp.int32)
     if exps.ndim == 2:  # pad the column axis alongside w (exponent 0 is id)
         exps = _pad_to(exps, 1, bn)
+    if m == 1 and bm == 1:
+        wp = _pad_to(w_codes, 1, bn)
+        out = apsq_matmul_m1_kernel(
+            x_codes, wp, exps, n_p=n_p, gs=int(gs), block_n=bn,
+            interpret=interpret)
+        return out[:, :n]
+    bm = max(bm, 8)  # the generic grid pads rows to sublane multiples
+    xp = _pad_to(x_codes, bm, 1)
+    wp = _pad_to(w_codes, 1, bn)
     out = apsq_matmul_kernel(
         xp, wp, exps,
-        n_p=n_p, gs=int(gs), block_m=bm, block_n=bn, interpret=interpret,
+        n_p=n_p, gs=int(gs), block_m=bm, block_n=bn, exp_layout=layout,
+        interpret=interpret,
     )
     return out[:m, :n]
+
+
+def apsq_expert_matmul_int8(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    exps: jax.Array,
+    *,
+    gs: int,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused expert-bank GEMM: [E, M, K] @ [E, K, N] -> [E, M, N] INT32.
+
+    ONE ``pallas_call`` serves all E experts (the expert axis is grid
+    dimension 0).  ``exps`` carries per-expert exponent banks: [E, n_p]
+    (per-tensor) or [E, n_p, N] (per-channel).  Ragged ``K % n_p`` gets
+    the same zero-contribution remainder group as the single-expert path.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n_e, m, k = x_codes.shape
+    n = w_codes.shape[2]
+    n_p = int(exps.shape[1])
+    bm, bn, _ = _resolve_blocks(m, k, n, n_p=n_p, gs=gs, block_m=block_m,
+                                block_n=block_n, exp_layout="blocked",
+                                expert=True)
+    bm = max(bm, min(8, _round_up(m, 8)))  # expert grid has no m=1 path
+    pad_k = (-k) % n_p
+    if pad_k:
+        x_codes = jnp.pad(x_codes, ((0, 0), (0, 0), (0, pad_k)))
+        w_codes = jnp.pad(w_codes, ((0, 0), (0, pad_k), (0, 0)))
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+    if pad_m:
+        x_codes = jnp.pad(x_codes, ((0, 0), (0, pad_m), (0, 0)))
+    if pad_n:
+        w_codes = jnp.pad(w_codes, ((0, 0), (0, 0), (0, pad_n)))
+    exps = exps.astype(jnp.int32)
+    if exps.ndim == 3 and pad_n:
+        exps = jnp.pad(exps, ((0, 0), (0, 0), (0, pad_n)))
+    out = apsq_expert_matmul_kernel(
+        x_codes, w_codes, exps,
+        n_p=n_p, gs=int(gs), block_m=bm, block_n=bn, interpret=interpret,
+    )
+    return out[:, :m, :n]
+
+
+def baseline_expert_matmul_int8(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    *,
+    n_p: int = 1,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused INT32-accumulator W8A8 expert GEMM; returns INT32 [E, M, N]."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n_e, m, k = x_codes.shape
+    n = w_codes.shape[2]
+    bm, bn, _ = _resolve_blocks(m, k, n, n_p=n_p, gs=1, block_m=block_m,
+                                block_n=block_n, exp_layout="blocked",
+                                expert=True)
+    bm = max(bm, min(8, _round_up(m, 8)))
+    pad_k = (-k) % n_p
+    if pad_k:
+        x_codes = jnp.pad(x_codes, ((0, 0), (0, 0), (0, pad_k)))
+        w_codes = jnp.pad(w_codes, ((0, 0), (0, pad_k), (0, 0)))
+    pad_m, pad_n = (-m) % bm, (-n) % bn
+    if pad_m:
+        x_codes = jnp.pad(x_codes, ((0, 0), (0, pad_m), (0, 0)))
+    if pad_n:
+        w_codes = jnp.pad(w_codes, ((0, 0), (0, 0), (0, pad_n)))
+    out = baseline_expert_matmul_kernel(
+        x_codes, w_codes, n_p=n_p, block_m=bm, block_n=bn,
+        interpret=interpret,
+    )
+    return out[:, :m, :n]
 
 
 def baseline_matmul_int8(
@@ -67,8 +202,8 @@ def baseline_matmul_int8(
     w_codes: jax.Array,
     *,
     n_p: int,
-    block_m: int = 128,
-    block_n: int = 128,
+    block_m: int | None = None,
+    block_n: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """INT32-accumulator W8A8 GEMM baseline; returns INT32 [M, N]."""
@@ -76,20 +211,16 @@ def baseline_matmul_int8(
         interpret = _default_interpret()
     m, k = x_codes.shape
     n = w_codes.shape[1]
+    bm, bn, _ = _resolve_blocks(m, k, n, n_p=n_p, gs=1, block_m=block_m,
+                                block_n=block_n, exp_layout="blocked")
+    bm = max(bm, min(8, _round_up(m, 8)))  # no m=1 kernel for the baseline
     x_codes, w_codes = ref.pad_ragged_k(x_codes, w_codes, n_p)
-    bm, bn = min(block_m, _ceil_mult(m, 8)), min(block_n, _ceil_mult(n, 128))
     xp = _pad_to(x_codes, bm, 1)
     wp = _pad_to(w_codes, 1, bn)
     out = baseline_matmul_kernel(
         xp, wp, n_p=n_p, block_m=bm, block_n=bn, interpret=interpret,
     )
     return out[:m, :n]
-
-
-def _ceil_mult(x: int, mult: int) -> int:
-    """Smallest block size: full dim if < mult else mult (keeps grids tiny
-    for unit-test shapes while staying 128-aligned for real ones)."""
-    return x if x < mult else mult
 
 
 def quantize_operands(
@@ -110,8 +241,8 @@ def apsq_matmul_f32(
     gs: int,
     ax: jax.Array | float,
     aw: jax.Array | float,
-    block_m: int = 128,
-    block_n: int = 128,
+    block_m: int | None = None,
+    block_n: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Deployment-path float entry: quantize -> integer kernel -> rescale.

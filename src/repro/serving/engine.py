@@ -50,6 +50,14 @@ APSQ kernel on TPU and the bit-identical jnp oracle elsewhere;
 runs); ``backend="oracle"`` pins the reference semantics.  Greedy
 decodes are token-for-token identical across backends.
 
+Pallas launch geometry resolves per shape class through the block
+autotuner (``repro.kernels.autotune``): decode steps (M=1) take the
+single-row fast path, prefill chunks get large tiles, and stacked MoE
+expert banks run as ONE fused grid over all experts.  Tuned winners in
+the on-disk cache apply automatically; pass
+``backend=PallasBackend(block_overrides={"decode_m1": BlockConfig(1,
+512)})`` to pin blocks for a shape class explicitly.
+
 The engine is host-driven (python around two jit'd functions) — the
 launcher's ``serve.py`` runs it; the dry-run lowers ``serve_step`` from
 ``repro.launch.dryrun`` directly.

@@ -307,3 +307,52 @@ def test_kv_attention_scalar_length_and_block_rounding():
                              jnp.asarray([20], jnp.int32), backend="oracle")
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                rtol=2e-5, atol=2e-6)
+
+
+def _stacked_expert_state(key, n_experts, *, k=32, n=16, per_channel=True):
+    """Stack E independently-exported linears into one expert-bank
+    DeployedQuantState (what export_quantized emits for MoE wi/wo)."""
+    import dataclasses
+    xs, dqs = zip(*[_exported_linear(jax.random.fold_in(key, e), k=k, n=n,
+                                     per_channel=per_channel)
+                    for e in range(n_experts)])
+    dq = dataclasses.replace(
+        dqs[0],
+        w_codes=jnp.stack([d.w_codes for d in dqs]),
+        ax_exp=jnp.stack([d.ax_exp for d in dqs]),
+        aw_exp=jnp.stack([d.aw_exp for d in dqs]),
+        psum_exps=jnp.stack([d.psum_exps for d in dqs]))
+    return jnp.stack(xs), dq, dqs
+
+
+@pytest.mark.parametrize("n_experts", [1, 4, 8])
+@pytest.mark.parametrize("per_channel,k", [(True, 32), (False, 45)])
+def test_execute_expert_gemm_fused_equals_unrolled(n_experts, per_channel,
+                                                   k):
+    """The single fused expert launch == manually unrolled per-expert
+    execute_gemm calls, on both backends, across expert counts, ragged K
+    (45 % n_p != 0) and per-column exponent banks."""
+    import dataclasses
+    x, dq, dqs = _stacked_expert_state(
+        jax.random.PRNGKey(11 + n_experts), n_experts, k=k,
+        per_channel=per_channel)
+    y_o = execute_expert_gemm(dq, x, backend="oracle")
+    y_p = execute_expert_gemm(dq, x, backend=PallasBackend(interpret=True))
+    np.testing.assert_array_equal(np.asarray(y_o), np.asarray(y_p))
+    for e in range(n_experts):
+        y_ref = execute_gemm(dqs[e], x[e], backend="oracle")
+        np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_o[e]))
+
+
+def test_expert_gemm_block_overrides_keep_parity():
+    """PallasBackend block_overrides change launch geometry only — the
+    fused expert output stays bit-identical."""
+    from repro.kernels.autotune import BlockConfig
+    x, dq, _ = _stacked_expert_state(jax.random.PRNGKey(17), 4)
+    base = execute_expert_gemm(dq, x, backend=PallasBackend(interpret=True))
+    pinned = execute_expert_gemm(
+        dq, x, backend=PallasBackend(
+            interpret=True,
+            block_overrides={"expert": BlockConfig(8, 128,
+                                                   source="override")}))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(pinned))

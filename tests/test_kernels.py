@@ -194,3 +194,133 @@ def test_ragged_k_equals_explicitly_padded():
     base = baseline_matmul_int8(x, w, n_p=n_p, interpret=True)
     np.testing.assert_array_equal(np.asarray(base),
                                   np.asarray(baseline_matmul_ref(x, w)))
+
+
+# ---------------------------------------------------------------------------
+# m=1 decode fast path (single grid row, K reduction unrolled in-register)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,n,n_p,gs", [
+    (32, 16, 4, 2),    # tiny
+    (45, 16, 4, 2),    # ragged K -> remainder PSUM group
+    (64, 32, 8, 3),    # PSQ-ish tail inside a group
+    (48, 16, 1, 1),    # n_p=1: single final tile
+])
+def test_m1_fastpath_bit_exact(k, n, n_p, gs):
+    """block_m=1 takes the fast path (no bank scratch, no K grid steps);
+    it must stay bit-identical to the oracle AND the generic grid."""
+    key = jax.random.PRNGKey(k * 7 + n)
+    x = _codes(key, (1, k))
+    w = _codes(jax.random.fold_in(key, 1), (k, n))
+    exps = choose_exps(x, w, n_p=n_p, gs=gs)
+    ref = apsq_matmul_ref(x, w, exps, n_p=n_p, gs=gs)
+    fast = apsq_matmul_int8(x, w, exps, gs=gs, block_m=1, interpret=True)
+    generic = apsq_matmul_int8(x, w, exps, gs=gs, block_m=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(fast))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(generic))
+
+
+def test_m1_fastpath_per_column_exponents():
+    """The fast path reads [n_p, N] banks whole — per-column shifts must
+    match the broadcasting oracle."""
+    key = jax.random.PRNGKey(29)
+    k, n, n_p, gs = 64, 24, 4, 2
+    x = _codes(key, (1, k))
+    w = _codes(jax.random.fold_in(key, 1), (k, n))
+    base = choose_exps(x, w, n_p=n_p, gs=gs)
+    exps = base[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :] % 3
+    ref = apsq_matmul_ref(x, w, exps, n_p=n_p, gs=gs)
+    out = apsq_matmul_int8(x, w, exps, gs=gs, block_m=1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_m1_default_resolution_takes_fastpath():
+    """With blocks unset, M=1 resolves block_m=1 via the autotune
+    heuristic — the decode shape must not pad to sublane rows."""
+    from repro.kernels import autotune
+    cfg = autotune.get_block_config(1, 64, 32, n_p=4, gs=2)
+    assert cfg.block_m == 1
+    key = jax.random.PRNGKey(31)
+    x = _codes(key, (1, 64))
+    w = _codes(jax.random.fold_in(key, 1), (64, 32))
+    exps = choose_exps(x, w, n_p=4, gs=2)
+    ref = apsq_matmul_ref(x, w, exps, n_p=4, gs=2)
+    out = apsq_matmul_int8(x, w, exps, gs=2, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_full_exp_layout_matches_blocked():
+    """exp_layout="full" (whole [n_p, N] bank resident, dynamic column
+    slice per tile) == "blocked" == oracle."""
+    key = jax.random.PRNGKey(37)
+    m, k, n, n_p, gs = 8, 64, 32, 4, 2
+    x = _codes(key, (m, k))
+    w = _codes(jax.random.fold_in(key, 1), (k, n))
+    base = choose_exps(x, w, n_p=n_p, gs=gs)
+    exps = base[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :] % 2
+    ref = apsq_matmul_ref(x, w, exps, n_p=n_p, gs=gs)
+    for layout in ("blocked", "full"):
+        out = apsq_matmul_int8(x, w, exps, gs=gs, block_m=8, block_n=16,
+                               exp_layout=layout, interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out),
+                                      err_msg=f"exp_layout={layout}")
+
+
+# ---------------------------------------------------------------------------
+# Fused MoE expert grid (one pallas_call for all E experts)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_experts", [1, 4, 8])
+def test_expert_fused_bit_exact_vs_unrolled(n_experts):
+    """ONE fused launch over the stacked [E, ...] bank == the E unrolled
+    single-expert launches == the oracle, expert by expert."""
+    from repro.kernels.apsq_matmul import apsq_expert_matmul_int8
+    key = jax.random.PRNGKey(41 + n_experts)
+    m, k, n, n_p, gs = 8, 32, 16, 4, 2
+    x = _codes(key, (n_experts, m, k))
+    w = _codes(jax.random.fold_in(key, 1), (n_experts, k, n))
+    exps = jnp.stack([choose_exps(x[e], w[e], n_p=n_p, gs=gs)
+                      for e in range(n_experts)])
+    fused = apsq_expert_matmul_int8(x, w, exps, gs=gs, interpret=True)
+    assert fused.shape == (n_experts, m, n)
+    for e in range(n_experts):
+        ref = apsq_matmul_ref(x[e], w[e], exps[e], n_p=n_p, gs=gs)
+        single = apsq_matmul_int8(x[e], w[e], exps[e], gs=gs,
+                                  interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref),
+                                      np.asarray(fused[e]),
+                                      err_msg=f"expert {e} vs oracle")
+        np.testing.assert_array_equal(np.asarray(single),
+                                      np.asarray(fused[e]),
+                                      err_msg=f"expert {e} vs unrolled")
+
+
+def test_expert_fused_ragged_k_and_per_column_banks():
+    """Ragged K (remainder PSUM group) and [E, n_p, N] per-column banks
+    through the fused grid."""
+    from repro.kernels.apsq_matmul import apsq_expert_matmul_int8
+    key = jax.random.PRNGKey(43)
+    E, m, k, n, n_p, gs = 3, 8, 45, 16, 4, 2
+    x = _codes(key, (E, m, k))
+    w = _codes(jax.random.fold_in(key, 1), (E, k, n))
+    base = jnp.stack([choose_exps(x[e], w[e], n_p=n_p, gs=gs)
+                      for e in range(E)])
+    exps = base[:, :, None] + jnp.arange(n, dtype=jnp.int32)[None, None] % 3
+    out = apsq_expert_matmul_int8(x, w, exps, gs=gs, interpret=True)
+    for e in range(E):
+        ref = apsq_matmul_ref(x[e], w[e], exps[e], n_p=n_p, gs=gs)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out[e]),
+                                      err_msg=f"expert {e}")
+
+
+def test_expert_fused_baseline_w8a8():
+    """The fused INT32-accumulator baseline == per-expert integer matmul."""
+    from repro.kernels.apsq_matmul import baseline_expert_matmul_int8
+    key = jax.random.PRNGKey(47)
+    E, m, k, n = 2, 8, 32, 16
+    x = _codes(key, (E, m, k))
+    w = _codes(jax.random.fold_in(key, 1), (E, k, n))
+    out = baseline_expert_matmul_int8(x, w, interpret=True)
+    for e in range(E):
+        np.testing.assert_array_equal(
+            np.asarray(baseline_matmul_ref(x[e], w[e])), np.asarray(out[e]))
