@@ -1,0 +1,102 @@
+"""Gate a fresh serving_bench run against the checked-in serving floor.
+
+CI's serve job runs ``serving_bench --smoke --json`` and then this script
+with the floor extracted from the committed ``BENCH_serving.json``
+(``git show HEAD:BENCH_serving.json``), mirroring
+``check_kernel_floor.py`` for the kernel-backend job.  Load records are
+matched on (streams, max_batch); each match must hold
+
+  * ``tokens_per_s``  at or above ``floor * slack``          (throughput)
+  * ``ttft_p50_ms``   at or below ``floor / slack``          (latency)
+
+and the fresh run's parity record must be all-green (a throughput number
+from an engine that diverged from the single-stream oracle is
+worthless).  Wall-clock on a shared CI box is noisy, so the default
+slack is generous — the gate exists to catch scheduler/prefill
+regressions that cost multiples (e.g. re-serializing the chunked
+prefill), not 10% jitter.
+
+Exit codes: 0 pass, 1 regression, 2 usage/IO error.  No overlapping
+load records is a warning, not a failure (a floor from before a load
+cell existed cannot gate it).
+"""
+import argparse
+import json
+import sys
+
+
+def _load_records(payload: dict) -> dict:
+    out = {}
+    for rec in payload.get("records", []):
+        if rec.get("section") != "load":
+            continue
+        out[(rec.get("streams"), rec.get("max_batch"))] = rec
+    return out
+
+
+def _parity_ok(payload: dict) -> bool:
+    for rec in payload.get("records", []):
+        if rec.get("section") == "parity":
+            return bool(rec.get("batched_eq_single")
+                        and rec.get("pallas_eq_oracle"))
+    return False
+
+
+def check(new: dict, floor: dict, slack: float, print_fn=print) -> int:
+    if not _parity_ok(new):
+        print_fn("floor,FAIL,parity record missing or not green — "
+                 "refusing to gate throughput of a diverged engine")
+        return 1
+    new_recs = _load_records(new)
+    floor_recs = _load_records(floor)
+    overlap = sorted(set(new_recs) & set(floor_recs))
+    if not overlap:
+        print_fn("floor,WARN,no overlapping load records — nothing to "
+                 "gate (floor predates these load cells?)")
+        return 0
+    failures = 0
+    for key in overlap:
+        streams, max_batch = key
+        rec, ref = new_recs[key], floor_recs[key]
+        tps, tps_need = rec.get("tokens_per_s", 0.0), \
+            ref.get("tokens_per_s", 0.0) * slack
+        ttft = rec.get("ttft_p50_ms", float("inf"))
+        ttft_need = ref.get("ttft_p50_ms", 0.0) / slack
+        ok = tps >= tps_need and ttft <= ttft_need
+        print_fn(f"floor,{'ok' if ok else 'FAIL'},streams={streams},"
+                 f"max_batch={max_batch},"
+                 f"tokens_per_s={tps} (floor*slack={tps_need:.1f}),"
+                 f"ttft_p50_ms={ttft} (floor/slack={ttft_need:.1f})")
+        failures += 0 if ok else 1
+    if failures:
+        print_fn(f"floor,FAIL,{failures}/{len(overlap)} load cells "
+                 f"regressed past the checked-in serving floor")
+        return 1
+    print_fn(f"floor,pass,{len(overlap)} load cells within the serving "
+             f"floor")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new_json", help="fresh serving_bench --json output")
+    ap.add_argument("floor_json",
+                    help="committed BENCH_serving.json to gate against")
+    ap.add_argument("--slack", type=float, default=0.25,
+                    help="required fraction of the floor (default 0.25: "
+                         "flag >4x regressions, tolerate shared-box "
+                         "timing noise)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.new_json) as f:
+            new = json.load(f)
+        with open(args.floor_json) as f:
+            floor = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"floor,ERROR,{e}")
+        return 2
+    return check(new, floor, args.slack)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,6 +6,8 @@ request arrivals are a Poisson process over decode steps, prompt and
 output lengths are mixed, and every stream decodes greedily.  Reported:
 
   * tokens/s (aggregate decode throughput across all streams),
+  * prefill tokens/s (prompt tokens through the chunked-prefill forwards
+    divided by the wall time spent inside them),
   * p50/p99 per-token latency (wall-clock of the engine step that
     produced each token) and p50/p99 time-to-first-token,
   * scheduler counters (admissions, preemptions) under the page pool,
@@ -112,10 +114,11 @@ def run_load(params, cfg, *, n_streams, max_batch, arrival_rate,
     eng = _engine(params, cfg, max_batch=max_batch, n_pages=n_pages,
                   backend=backend, page_size=page_size)
 
-    # Warm the two compiles (one prefill bucket, one decode shape) so the
-    # latency percentiles measure steady-state serving, not tracing.
-    warm = Request(uid=-1, tokens=np.zeros(4, np.int32), max_new_tokens=2)
+    # Warm the compiles (pow2 prefill chunk shapes + the decode shape) so
+    # the latency percentiles measure steady-state serving, not tracing.
+    warm = Request(uid=-1, tokens=np.zeros(15, np.int32), max_new_tokens=2)
     eng.run([warm])
+    eng.prefill_tokens, eng.prefill_seconds = 0, 0.0
 
     pending = sorted(zip(arrival_step, reqs), key=lambda x: x[0])
     arrive_t: dict = {}
@@ -151,10 +154,13 @@ def run_load(params, cfg, *, n_streams, max_batch, arrival_rate,
                                max_batch=max_batch,
                                cache_len=per_slot * page_size)
     stats = eng.sched.stats
+    prefill_tps = (eng.prefill_tokens / eng.prefill_seconds
+                   if eng.prefill_seconds else 0.0)
     print_fn(
         f"serving,load,streams={n_streams},max_batch={max_batch},"
         f"steps={step},tokens={total_tokens},"
         f"tokens_per_s={total_tokens / wall:.1f},"
+        f"prefill_tokens_per_s={prefill_tps:.1f},"
         f"p50_ms={np.percentile(lat_ms, 50):.1f},"
         f"p99_ms={np.percentile(lat_ms, 99):.1f},"
         f"ttft_p50_ms={np.percentile(ttft_ms, 50):.1f},"
@@ -170,6 +176,8 @@ def run_load(params, cfg, *, n_streams, max_batch, arrival_rate,
             "max_batch": max_batch, "arrival_rate": arrival_rate,
             "steps": step, "tokens": total_tokens,
             "tokens_per_s": round(total_tokens / wall, 1),
+            "prefill_tokens": int(eng.prefill_tokens),
+            "prefill_tokens_per_s": round(prefill_tps, 1),
             "p50_ms": round(float(np.percentile(lat_ms, 50)), 2),
             "p99_ms": round(float(np.percentile(lat_ms, 99)), 2),
             "ttft_p50_ms": round(float(np.percentile(ttft_ms, 50)), 2),
@@ -201,8 +209,10 @@ def run(print_fn=print, smoke: bool = False, records: list | None = None,
     if smoke:  # the CI cell: 64 concurrent streams, oracle numbers
         run_load(params, cfg, n_streams=64, max_batch=64, arrival_rate=8.0,
                  seed=seed, print_fn=print_fn, records=records)
-    else:  # hundreds of streams, two concurrency points
-        for n_streams, max_batch in ((128, 32), (256, 64)):
+    else:  # the CI cell first (so the committed floor overlaps smoke
+           # runs and check_serving_floor can gate them), then hundreds
+           # of streams at two concurrency points
+        for n_streams, max_batch in ((64, 64), (128, 32), (256, 64)):
             run_load(params, cfg, n_streams=n_streams, max_batch=max_batch,
                      arrival_rate=8.0, seed=seed, print_fn=print_fn,
                      records=records)

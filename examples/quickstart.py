@@ -165,11 +165,22 @@ for pname, pol in [
 # the KV cache); a host-side scheduler admits requests as slots and pages
 # free up, grows each stream's page list on demand, and — when the pool
 # runs dry — preempts the latest-admitted stream and resumes it later
-# with bit-identical output.  Decode attention reads go through the
-# second ``repro.exec`` op family (``kv_attention``: Pallas flash-decode
-# kernel on TPU, jnp oracle elsewhere), so weights AND cache are integer
-# end to end.  ``benchmarks/serving_bench.py`` drives this engine with
-# hundreds of Poisson-arrival streams and reports tokens/s + p50/p99.
+# with bit-identical output.  Prompts prefill CHUNKED: up to
+# ``prefill_chunk`` tokens per forward (every GEMM at m=chunk, attention
+# with an in-chunk causal mask against the paged cache), writing the same
+# INT8 codes and exponents the old token-by-token scan wrote — bit
+# identical, just ~chunk-times fewer dispatches, so TTFT drops.  Each
+# engine step spends a ``prefill_token_budget`` on pending prompts before
+# decoding all in-flight slots, so long prompts interleave with decodes
+# instead of stalling them; raise ``prefill_chunk`` (and the budget) for
+# prompt-heavy loads.  Decode attention reads go through the second
+# ``repro.exec`` op family (``kv_attention``: Pallas flash-decode kernel
+# on TPU, jnp oracle elsewhere — the chunk rides its query-row axis, the
+# "prefill_attn" autotune class), so weights AND cache are integer end to
+# end.  ``benchmarks/serving_bench.py`` drives this engine with hundreds
+# of Poisson-arrival streams and reports tokens/s, prefill tokens/s and
+# p50/p99; ``benchmarks/check_serving_floor.py`` holds CI to the
+# committed floors.
 from repro.serving import PagedServingEngine
 
 paged = PagedServingEngine.from_exported(

@@ -26,8 +26,14 @@
 #                                 itself gates on backend decode parity —
 #                                 batched == single-stream and oracle ==
 #                                 interpret-mode pallas, token-for-token —
-#                                 before reporting tokens/s and p50/p99
-#                                 into BENCH_serving.json.
+#                                 before reporting tokens/s, prefill
+#                                 tokens/s and p50/p99 into
+#                                 BENCH_serving.json.  The fresh run is
+#                                 then gated against the committed
+#                                 BENCH_serving.json tokens/s + ttft_p50
+#                                 floors (check_serving_floor.py), so a
+#                                 scheduler or chunked-prefill regression
+#                                 fails fast like a kernel-geometry one.
 #
 # Collection regressions (missing modules, import errors) fail the run
 # because pytest errors out before running a single test.
@@ -61,8 +67,18 @@ elif [[ "${1:-}" == "search" ]]; then
 elif [[ "${1:-}" == "serve" ]]; then
     shift
     python -m pytest -q tests/test_paged_serving.py tests/test_kernels_kv.py "$@"
+    # Save the committed floor BEFORE the bench overwrites BENCH_serving.json.
+    floor="$(mktemp)"
+    git show HEAD:BENCH_serving.json > "$floor" 2>/dev/null || floor=""
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m benchmarks.serving_bench --smoke --json BENCH_serving.json
+    if [[ -n "$floor" ]]; then
+        PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+            python -m benchmarks.check_serving_floor BENCH_serving.json "$floor"
+        rm -f "$floor"
+    else
+        echo "floor,WARN,no committed BENCH_serving.json — floor gate skipped"
+    fi
 else
     python -m pytest -x -q "$@"
 fi

@@ -44,10 +44,12 @@ class ExecBackend:
       layer's weight codes [K, N] and PSUM shift exponents ([n_p] or
       [n_p, N]; None for plain W8A8) and returns the INT32 result in
       product-scale units.
-    * ``kv_attention`` consumes a query [B, Hq, hd] (float), an INT8 KV
-      cache ([B, S, Hkv, hd] codes with per-(batch, head) PO2 exponents)
-      and per-batch valid lengths, and returns decode attention output
-      [B, Hq, hd] — the serving engine's paged-cache read path.
+    * ``kv_attention`` consumes a query (float), an INT8 KV cache
+      ([B, S, Hkv, hd] codes with per-(batch, head) PO2 exponents) and
+      per-batch valid lengths, and returns attention output — the serving
+      engine's paged-cache read path.  A 3D query [B, Hq, hd] is one
+      decode row; a 4D query [B, C, Hq, hd] is a causal prefill chunk
+      whose last row sits at cache position ``length - 1``.
     """
 
     name = "base"
@@ -169,6 +171,17 @@ class PallasBackend(ExecBackend):
     def kv_attention(self, q, k_codes, v_codes, k_exp, v_exp, length, *,
                      block_s):
         from repro.kernels.int8_kv_attention import int8_kv_attention
+        if q.ndim == 4:
+            # Chunked prefill: resolve the KV tile through the
+            # ``prefill_attn`` shape class (tuned winner or heuristic;
+            # ``block_overrides`` pins it), snapped to a divisor of S.
+            from repro.kernels import autotune
+            cfg = self.block_overrides.get("prefill_attn")
+            if cfg is None:
+                cfg = autotune.get_block_config(
+                    int(q.shape[1]), int(q.shape[-1]),
+                    int(k_codes.shape[1]), n_p=1, gs=1, attn=True)
+            block_s = kv_block_size(int(k_codes.shape[1]), cfg.block_n)
         return int8_kv_attention(q, k_codes, v_codes, k_exp, v_exp, length,
                                  block_s=block_s, interpret=self.interpret)
 
@@ -288,14 +301,18 @@ def execute_kv_attention(q: jax.Array, k_codes: jax.Array,
                          v_exp: jax.Array, length: jax.Array, *,
                          block_s: int | None = None,
                          backend=None) -> jax.Array:
-    """Decode attention over an INT8 KV cache through the backend registry.
+    """Attention over an INT8 KV cache through the backend registry.
 
-    q: [B, Hq, hd] float; k_codes/v_codes: [B, S, Hkv, hd] int8 with
-    per-(batch, kv-head) PO2 exponents [B, Hkv] int32; ``length`` [B] (or
-    scalar) masks the valid cache prefix.  Returns [B, Hq, hd] in q's
-    dtype.  This is the second op family beside ``execute_gemm``: the
-    ``oracle`` backend runs the shape-polymorphic jnp reference, the
-    ``pallas`` backend the flash-decode TPU kernel (interpret off-TPU).
+    q: [B, Hq, hd] float (decode: one row) or [B, C, Hq, hd] (prefill
+    chunk: C causal rows ending at cache position ``length - 1``);
+    k_codes/v_codes: [B, S, Hkv, hd] int8 with per-(batch, kv-head) PO2
+    exponents [B, Hkv] int32; ``length`` [B] (or scalar) masks the valid
+    cache prefix.  Returns output matching q's rank, in q's dtype.  This
+    is the second op family beside ``execute_gemm``: the ``oracle``
+    backend runs the shape-polymorphic jnp reference, the ``pallas``
+    backend the flash-decode TPU kernel (interpret off-TPU); chunked
+    launches resolve their KV tile via the ``prefill_attn`` autotune
+    shape class.
     """
     backend = get_backend(backend).resolve()
     s = int(k_codes.shape[1])

@@ -31,6 +31,10 @@ Shape classes
 ``prefill``    M > 32 — batched prefill / QAT forward.
 ``expert``     MoE expert-bank GEMMs (per-expert M = dispatch capacity),
                executed by the fused expert-grid kernel.
+``prefill_attn``  chunked-prefill KV attention (``int8_kv_attention``
+               with a [chunk] query block): m = chunk rows, k = head dim,
+               n = gathered KV sequence; ``block_n`` is the kernel's
+               ``block_s`` KV tile (snapped to a divisor of S at launch).
 
 Cache
 -----
@@ -54,7 +58,8 @@ import jax
 
 CACHE_VERSION = 1
 
-SHAPE_CLASSES = ("decode_m1", "small_m", "prefill", "expert")
+SHAPE_CLASSES = ("decode_m1", "small_m", "prefill", "expert",
+                 "prefill_attn")
 
 # Exponent-block layouts for the [n_p, N] per-channel export layout:
 #   "blocked" — the kernel sees a [n_p, block_n] VMEM slice per (j) tile
@@ -90,8 +95,10 @@ class BlockConfig:
                 "exp_layout": self.exp_layout, "blocks_source": self.source}
 
 
-def shape_class(m: int, *, expert: bool = False) -> str:
+def shape_class(m: int, *, expert: bool = False, attn: bool = False) -> str:
     """Bucket a GEMM by its M extent (the serving-relevant axis)."""
+    if attn:
+        return "prefill_attn"
     if expert:
         return "expert"
     if m == 1:
@@ -151,6 +158,10 @@ def heuristic_config(cls: str, m: int, k: int, n: int, *, n_p: int,
         bm, bn = _fit_block(m, 32, 8), _fit_block(n, 512, 128)
     elif cls == "expert":
         bm, bn = _fit_block(m, 128, 8), _fit_block(n, 256, 128)
+    elif cls == "prefill_attn":
+        # m = chunk rows (all resident in the q tile), n = KV sequence;
+        # block_n is the flash-decode block_s KV tile.
+        bm, bn = _fit_block(m, 32, 8), _fit_block(n, 512, 128)
     else:  # prefill
         bm, bn = _fit_block(m, 256, 8), _fit_block(n, 512, 128)
     bm, bn, layout = _clamp_to_budget(bm, bn, k, n_p, gs, "blocked", n)
@@ -167,11 +178,15 @@ def candidate_configs(cls: str, m: int, k: int, n: int, *, n_p: int,
     """
     if cls == "decode_m1":
         bms = [1]
+    elif cls == "prefill_attn":
+        # The chunk's query rows all sit in one q tile; only the KV tile
+        # (block_n -> block_s) is searchable geometry.
+        bms = [_fit_block(m, 32, 8)]
     else:
         caps = (8, 32, 64, 128, 256)
         bms = sorted({_fit_block(m, c, 8) for c in caps})
     bns = sorted({_fit_block(n, c, 128) for c in (128, 256, 512)})
-    layouts = ("blocked",) if cls in ("expert", "decode_m1") \
+    layouts = ("blocked",) if cls in ("expert", "decode_m1", "prefill_attn") \
         else EXP_LAYOUTS
     out = []
     for bm in bms:
@@ -236,7 +251,7 @@ def clear_memory_cache() -> None:
 
 
 def get_block_config(m: int, k: int, n: int, *, n_p: int, gs: int,
-                     expert: bool = False,
+                     expert: bool = False, attn: bool = False,
                      path: str | None = None) -> BlockConfig:
     """The launch-time lookup: cached winner if tuned, else heuristic.
 
@@ -245,7 +260,7 @@ def get_block_config(m: int, k: int, n: int, *, n_p: int, gs: int,
     is clamped to the actual padded dims so a winner tuned at a large
     representative shape stays legal on a smaller same-class shape.
     """
-    cls = shape_class(m, expert=expert)
+    cls = shape_class(m, expert=expert, attn=attn)
     entry = _load_cache(path).get(cache_key(cls, n_p, gs))
     if entry is not None:
         bm = min(int(entry["block_m"]), _round_up(m, 8)) \
@@ -296,8 +311,40 @@ def _default_measure(cfg: BlockConfig, m: int, k: int, n: int, *, n_p: int,
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+def _default_measure_attn(cfg: BlockConfig, m: int, k: int, n: int, *,
+                          n_p: int, gs: int, expert: bool, reps: int,
+                          interpret: bool | None) -> float:
+    """Wall-clock one chunked KV-attention launch: m = chunk query rows,
+    k = head dim, n = KV sequence; ``cfg.block_n`` is the requested
+    ``block_s`` KV tile (snapped to a divisor of S, as at serving time)."""
+    import jax.numpy as jnp
+
+    from .int8_kv_attention import int8_kv_attention
+
+    B, Hkv, G = 1, 4, 2
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, m, Hkv * G, k), jnp.float32)
+    kc = jax.random.randint(jax.random.fold_in(key, 1), (B, n, Hkv, k),
+                            -128, 128, jnp.int8)
+    vc = jax.random.randint(jax.random.fold_in(key, 2), (B, n, Hkv, k),
+                            -128, 128, jnp.int8)
+    exps = jnp.full((B, Hkv), -7, jnp.int32)
+    block_s = max(1, min(cfg.block_n, n))
+    while n % block_s:
+        block_s -= 1
+    f = lambda: int8_kv_attention(q, kc, vc, exps, exps, n,
+                                  block_s=block_s, interpret=interpret)
+    jax.block_until_ready(f())  # compile + warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
 def tune(m: int, k: int, n: int, *, n_p: int, gs: int,
-         expert: bool = False, reps: int = 3, path: str | None = None,
+         expert: bool = False, attn: bool = False, reps: int = 3,
+         path: str | None = None,
          interpret: bool | None = None, measure=None,
          verbose=None) -> BlockConfig:
     """Measure every candidate for this shape's class and cache the winner.
@@ -308,8 +355,9 @@ def tune(m: int, k: int, n: int, *, n_p: int, gs: int,
     deterministic candidate order, so the same measurements always yield
     the same winner.
     """
-    cls = shape_class(m, expert=expert)
-    measure = measure or _default_measure
+    cls = shape_class(m, expert=expert, attn=attn)
+    measure = measure or (_default_measure_attn if attn
+                          else _default_measure)
     best_cfg, best_us = None, float("inf")
     for cfg in candidate_configs(cls, m, k, n, n_p=n_p, gs=gs):
         us = measure(cfg, m, k, n, n_p=n_p, gs=gs, expert=expert,
@@ -338,6 +386,9 @@ STANDARD_SHAPES = (
     ("small_m", dict(m=16, k=1024, n=512, expert=False)),
     ("prefill", dict(m=256, k=1024, n=512, expert=False)),
     ("expert", dict(m=64, k=512, n=256, expert=True)),
+    # Chunked-prefill KV attention: m = chunk rows, k = head dim,
+    # n = gathered KV sequence.
+    ("prefill_attn", dict(m=16, k=64, n=512, expert=False, attn=True)),
 )
 
 
@@ -349,7 +400,8 @@ def tune_standard_shapes(*, n_p: int = 8, gs: int = 2, reps: int = 3,
     out = {}
     for cls, shp in STANDARD_SHAPES:
         out[cls] = tune(shp["m"], shp["k"], shp["n"], n_p=n_p, gs=gs,
-                        expert=shp["expert"], reps=reps, path=path,
+                        expert=shp["expert"], attn=shp.get("attn", False),
+                        reps=reps, path=path,
                         interpret=interpret, measure=measure,
                         verbose=verbose)
     return out
@@ -363,7 +415,8 @@ def resolved_table(*, n_p: int = 8, gs: int = 2,
     out = {}
     for cls, shp in shapes:
         cfg = get_block_config(shp["m"], shp["k"], shp["n"], n_p=n_p,
-                               gs=gs, expert=shp["expert"])
+                               gs=gs, expert=shp["expert"],
+                               attn=shp.get("attn", False))
         out[cls] = cfg.as_record()
     return out
 

@@ -35,7 +35,8 @@ NEG_INF = -1e30
 
 def _kv_attn_kernel(kexp_ref, vexp_ref, len_ref, q_ref, k_ref, v_ref,
                     out_ref, m_ref, l_ref, acc_ref, *,
-                    n_blocks: int, block_s: int, scale: float):
+                    n_blocks: int, block_s: int, scale: float,
+                    chunk: int, group: int):
     b = pl.program_id(0)
     h = pl.program_id(1)
     s = pl.program_id(2)
@@ -46,7 +47,7 @@ def _kv_attn_kernel(kexp_ref, vexp_ref, len_ref, q_ref, k_ref, v_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0]                       # [G, hd] fp32
+    q = q_ref[0, 0]                       # [chunk * G, hd] fp32
     k = k_ref[0, :, 0].astype(jnp.float32)  # [block_s, hd] int8 codes
     v = v_ref[0, :, 0].astype(jnp.float32)
     k_scale = jnp.exp2(kexp_ref[b, h].astype(jnp.float32))
@@ -55,9 +56,13 @@ def _kv_attn_kernel(kexp_ref, vexp_ref, len_ref, q_ref, k_ref, v_ref,
     # scores over codes; the PO2 dequant folds into the softmax scale.
     sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
-    sc = sc * (scale * k_scale)           # [G, block_s]
+    sc = sc * (scale * k_scale)           # [chunk * G, block_s]
     pos = s * block_s + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
-    sc = jnp.where(pos < len_ref[b], sc, NEG_INF)
+    # Causal over the chunk: query row r is chunk token t = r // G, whose
+    # cache position is len - chunk + t; it sees positions < that + 1.
+    # chunk == 1 reduces to the decode mask (pos < len).
+    row_t = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0) // group
+    sc = jnp.where(pos < len_ref[b] - chunk + 1 + row_t, sc, NEG_INF)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(sc, axis=1))
@@ -86,7 +91,7 @@ def _compiler_params():
 @functools.partial(jax.jit,
                    static_argnames=("block_s", "interpret"))
 def int8_kv_attention_kernel(
-    q: jax.Array,        # [B, Hq, hd] fp32
+    q: jax.Array,        # [B, Hq, hd] or [B, C, Hq, hd] fp32
     k_codes: jax.Array,  # [B, S, Hkv, hd] int8
     v_codes: jax.Array,  # [B, S, Hkv, hd] int8
     k_exp: jax.Array,    # [B, Hkv] int32
@@ -96,35 +101,48 @@ def int8_kv_attention_kernel(
     block_s: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    B, S, Hkv, hd = k_codes.shape
-    Hq = q.shape[1]
+    """3D q: one decode row.  4D q: a [chunk] of causal prefill rows whose
+    last row sits at cache position ``length - 1`` (same flash-decode
+    grid; the chunk rides the query-row axis of the q tile, so the MXU
+    sees ``chunk * G`` score rows per (b, h) instead of ``G``)."""
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, C, Hq, hd = q.shape
+    S, Hkv = k_codes.shape[1], k_codes.shape[2]
     G = Hq // Hkv
+    CG = C * G
     assert S % block_s == 0, (S, block_s)
     n_blocks = S // block_s
     scale = 1.0 / math.sqrt(hd)
 
-    qr = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    # [B, C, Hkv, G, hd] -> [B, Hkv, C*G, hd]: all of a kv-head's chunk
+    # rows land in one q tile.
+    qr = jnp.moveaxis(q.reshape(B, C, Hkv, G, hd).astype(jnp.float32),
+                      1, 2).reshape(B, Hkv, CG, hd)
     grid = (B, Hkv, n_blocks)
     out = pl.pallas_call(
         functools.partial(_kv_attn_kernel, n_blocks=n_blocks,
-                          block_s=block_s, scale=scale),
+                          block_s=block_s, scale=scale, chunk=C, group=G),
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),   # k_exp
             pl.BlockSpec(memory_space=pltpu.SMEM),   # v_exp
             pl.BlockSpec(memory_space=pltpu.SMEM),   # length
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, CG, hd), lambda b, h, s: (b, h, 0, 0)),
             pl.BlockSpec((1, block_s, 1, hd), lambda b, h, s: (b, s, h, 0)),
             pl.BlockSpec((1, block_s, 1, hd), lambda b, h, s: (b, s, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), jnp.float32),
+        out_specs=pl.BlockSpec((1, 1, CG, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, CG, hd), jnp.float32),
         scratch_shapes=[
-            pltpu.VMEM((G,), jnp.float32),
-            pltpu.VMEM((G,), jnp.float32),
-            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((CG,), jnp.float32),
+            pltpu.VMEM((CG,), jnp.float32),
+            pltpu.VMEM((CG, hd), jnp.float32),
         ],
         compiler_params=_compiler_params(),
         interpret=interpret,
     )(k_exp, v_exp, length, qr, k_codes, v_codes)
-    return out.reshape(B, Hq, hd)
+    out = jnp.moveaxis(out.reshape(B, Hkv, C, G, hd),
+                       2, 1).reshape(B, C, Hq, hd)
+    return out[:, 0] if squeeze else out

@@ -13,7 +13,7 @@ def _default_interpret() -> bool:
 
 
 def int8_kv_attention(
-    q: jax.Array,        # [B, Hq, hd]
+    q: jax.Array,        # [B, Hq, hd] decode or [B, C, Hq, hd] chunk
     k_codes: jax.Array,  # [B, S, Hkv, hd] int8
     v_codes: jax.Array,
     k_exp: jax.Array,    # [B, Hkv] int32
@@ -23,7 +23,12 @@ def int8_kv_attention(
     block_s: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Decode attention over an INT8 cache; returns [B, Hq, hd] (q dtype)."""
+    """Attention over an INT8 cache, matching q's rank.
+
+    3D q is the decode form (one row per batch); 4D q is a prefill chunk
+    of C causal rows ending at cache position ``length - 1``.  Returns
+    [B, Hq, hd] / [B, C, Hq, hd] in q's dtype.
+    """
     if interpret is None:
         interpret = _default_interpret()
     B, S = k_codes.shape[:2]

@@ -39,27 +39,40 @@ def dequantize_kv_po2(codes: jax.Array, exp: jax.Array,
 
 
 def int8_kv_attention_ref(
-    q: jax.Array,           # [B, Hq, hd] float
+    q: jax.Array,           # [B, Hq, hd] or [B, C, Hq, hd] float
     k_codes: jax.Array,     # [B, S, Hkv, hd] int8
     v_codes: jax.Array,     # [B, S, Hkv, hd] int8
     k_exp: jax.Array,       # [B, Hkv] int32
     v_exp: jax.Array,       # [B, Hkv] int32
     length: jax.Array | int,  # valid cache length (scalar or [B])
 ) -> jax.Array:
-    """Oracle decode attention over the INT8 cache; returns [B, Hq, hd]."""
-    B, S, Hkv, hd = k_codes.shape
-    Hq = q.shape[1]
+    """Oracle attention over the INT8 cache.
+
+    Decode form (3D q): one query row per batch, attending to the first
+    ``length`` cache positions; returns [B, Hq, hd].  Prefill-chunk form
+    (4D q): C causal query rows whose LAST row sits at cache position
+    ``length - 1`` — row ``t`` sees positions ``< length - C + 1 + t`` —
+    returns [B, C, Hq, hd].  C = 1 reduces exactly to the decode form.
+    """
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, C, Hq, hd = q.shape
+    S, Hkv = k_codes.shape[1], k_codes.shape[2]
     G = Hq // Hkv
     scale = 1.0 / math.sqrt(hd)
     k = dequantize_kv_po2(k_codes, k_exp)
     v = dequantize_kv_po2(v_codes, v_exp)
-    qf = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
-    s = jnp.einsum("bhgd,bshd->bhgs", qf, k) * scale
-    valid = jnp.arange(S)[None] < jnp.reshape(jnp.asarray(length), (-1, 1))
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    qf = q.reshape(B, C, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bchgd,bshd->bchgs", qf, k) * scale
+    limit = (jnp.reshape(jnp.asarray(length), (-1, 1)) - C + 1
+             + jnp.arange(C)[None])                 # [B, C]
+    valid = jnp.arange(S)[None, None] < limit[..., None]
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhgs,bshd->bhgd", p, v)
-    return out.reshape(B, Hq, hd).astype(q.dtype)
+    out = jnp.einsum("bchgs,bshd->bchgd", p, v)
+    out = out.reshape(B, C, Hq, hd).astype(q.dtype)
+    return out[:, 0] if squeeze else out
 
 
 def fp_attention_ref(q, k, v, length):

@@ -319,11 +319,13 @@ def attention_block(
       (out, kv) where kv = (k, v) for the caller to install into a cache.
     * ``cache = {"k":..., "v":...}``: single-token decode at ``pos``;
       returns (out, new_cache).
-    * ``cache = {"k_pages", "v_pages", "k_exp", "v_exp"}``: single-token
-      decode against the paged INT8 KV cache (``repro.serving.paged_cache``)
-      — ``pos`` is a per-slot [B] vector, ``page_table`` the [B, n_max]
-      physical page ids, and the attention read dispatches through the
-      ``repro.exec`` registry (``execute_kv_attention``).
+    * ``cache = {"k_pages", "v_pages", "k_exp", "v_exp"}``: decode (S=1)
+      or a prefill chunk (S>1, causal within the chunk) against the paged
+      INT8 KV cache (``repro.serving.paged_cache``) — ``pos`` is a
+      per-slot [B] vector (the chunk's FIRST position), ``page_table`` the
+      [B, n_max] physical page ids, and the attention read dispatches
+      through the ``repro.exec`` registry (``execute_kv_attention``).
+      The chunked write/read is bit-identical to scanning the S=1 path.
 
     ``xkv`` (cross-attention): keys/values come from ``xkv`` instead of x,
     non-causal, no rope on kv by default (encoder output is position-free).
@@ -353,15 +355,21 @@ def attention_block(
         q = apply_rope(q, qpos, fraction=rope_fraction, theta=rope_theta)
         k = apply_rope(k, qpos, fraction=rope_fraction, theta=rope_theta)
 
-    if paged:  # decode against the paged INT8 KV cache
+    if paged:  # decode / prefill chunk against the paged INT8 KV cache
         if window is not None or softcap is not None:
             raise NotImplementedError(
                 "paged INT8 KV decode serves full attention only "
                 "(no sliding window / softcap)")
-        from repro.serving.paged_cache import paged_update_and_attend
-        out, new_cache = paged_update_and_attend(
-            cache, q[:, 0], k, v, pos, page_table, backend=backend)
-        out = out[:, None]  # [B, Hq, hd] -> [B, 1, Hq, hd]
+        if S == 1:
+            from repro.serving.paged_cache import paged_update_and_attend
+            out, new_cache = paged_update_and_attend(
+                cache, q[:, 0], k, v, pos, page_table, backend=backend)
+            out = out[:, None]  # [B, Hq, hd] -> [B, 1, Hq, hd]
+        else:
+            from repro.serving.paged_cache import (
+                paged_prefill_chunk_update_and_attend)
+            out, new_cache = paged_prefill_chunk_update_and_attend(
+                cache, q, k, v, pos, page_table, backend=backend)
     elif cache is not None:  # decode
         ring = window is not None
         kc, vc = update_kv_cache(cache["k"], cache["v"], k, v, pos, ring=ring)

@@ -208,9 +208,15 @@ def apply_layer(
             mesh=mesh, tap=tap, backend=backend, page_table=page_table)
         new_state = kv
     elif kind == "rwkv":
+        # Chunked paged prefill must stay bit-identical to the per-token
+        # scan; the chunk-parallel WKV reorders fp32 accumulation, so
+        # force the sequential impl whenever a multi-token chunk runs
+        # against paged serving state.
+        exact = page_table is not None and x.shape[1] > 1
         out, tm_state = rwkv_time_mix(
             p["mix"], h, n_heads=cfg.n_heads, head_dim=cfg.hd, quant=quant,
-            impl=cfg.wkv_impl, wkv_chunk=cfg.wkv_chunk, mesh=mesh,
+            impl="scan" if exact else cfg.wkv_impl,
+            wkv_chunk=cfg.wkv_chunk, mesh=mesh,
             state=state["tm"] if state is not None else None, tap=tap,
             backend=backend)
         new_state = {"tm": tm_state}
@@ -218,7 +224,8 @@ def apply_layer(
         out, rec_state = rglru_block(
             p["mix"], h, quant=quant, mesh=mesh,
             state=state["rec"] if state is not None else None, tap=tap,
-            backend=backend)
+            backend=backend,
+            exact_scan=page_table is not None and x.shape[1] > 1)
         new_state = {"rec": rec_state}
     else:
         raise ValueError(kind)
@@ -645,24 +652,32 @@ def init_paged_decode_state(cfg: ModelConfig, batch: int, *, page_size: int,
     return state
 
 
-def decode_step_paged(
+def forward_paged_chunk(
     p: Params,
     cfg: ModelConfig,
     state: Params,
-    token: jax.Array,
+    tokens: jax.Array,
     pos: jax.Array,
     page_table: jax.Array,
     *,
     mesh=None,
     backend=None,
 ):
-    """One decode step over the paged INT8 KV cache.
+    """One prefill chunk (or decode step, C=1) over the paged INT8 cache.
 
-    Unlike ``decode_step``, ``pos`` is a per-slot [B] int32 vector (slots
-    advance independently under continuous batching) and ``page_table``
+    ``tokens`` [B, C] is a block of C consecutive prompt tokens whose
+    first token sits at per-slot position ``pos`` [B]; ``page_table``
     [B, n_max] maps each slot's logical pages to physical pool pages.
-    Returns (logits [B, 1, V], new_state)."""
-    x = jnp.take(p["embed"]["table"], token, axis=0)
+    All non-attention GEMMs run once at m=C; attention layers write the
+    chunk's quantized KV through the same per-token bump-rescale
+    recurrence as decode (the paged pools end bit-identical to C
+    single-token calls) and attend with an in-chunk causal mask.
+    Recurrent layers run exact sequential scans (``apply_layer`` forces
+    rwkv impl="scan" / rglru exact_scan when C > 1), so the carried
+    states match the token-by-token path bit-for-bit too.
+
+    Returns (logits [B, 1, V] for the LAST chunk row, new_state)."""
+    x = jnp.take(p["embed"]["table"], tokens, axis=0)
 
     new_state = dict(state)
     if cfg.n_units:
@@ -690,8 +705,30 @@ def decode_step_paged(
                            state=state[f"rem{i}"], pos=pos,
                            backend=backend, page_table=page_table)
         new_state[f"rem{i}"] = s
-    logits = logits_from_hidden(p, cfg, x, mesh, backend=backend)
+    logits = logits_from_hidden(p, cfg, x[:, -1:], mesh, backend=backend)
     return logits, new_state
+
+
+def decode_step_paged(
+    p: Params,
+    cfg: ModelConfig,
+    state: Params,
+    token: jax.Array,
+    pos: jax.Array,
+    page_table: jax.Array,
+    *,
+    mesh=None,
+    backend=None,
+):
+    """One decode step over the paged INT8 KV cache.
+
+    Unlike ``decode_step``, ``pos`` is a per-slot [B] int32 vector (slots
+    advance independently under continuous batching) and ``page_table``
+    [B, n_max] maps each slot's logical pages to physical pool pages.
+    Returns (logits [B, 1, V], new_state).  This is exactly
+    ``forward_paged_chunk`` with a chunk of one token."""
+    return forward_paged_chunk(p, cfg, state, token, pos, page_table,
+                               mesh=mesh, backend=backend)
 
 
 # ---------------------------------------------------------------------------

@@ -97,9 +97,16 @@ def _rglru_scan(x: jax.Array, a: jax.Array, h0: jax.Array):
 def rglru_block(p: Params, x: jax.Array, *,
                 quant=None,
                 state: Params | None = None, mesh=None,
-                tap: list | None = None, backend=None):
+                tap: list | None = None, backend=None,
+                exact_scan: bool = False):
     """Full recurrent block.  state = {"h": [B, d_rnn] fp32,
-    "conv": [B, 3, d_rnn]} or None (fresh)."""
+    "conv": [B, 3, d_rnn]} or None (fresh).
+
+    ``exact_scan=True`` runs the recurrence as a sequential ``lax.scan``
+    instead of the associative scan — same math, but bit-identical to
+    S-many single-token calls (the associative tree reorders the fp32
+    multiply-adds).  Chunked paged prefill uses this so a chunk matches
+    the token-by-token scan exactly."""
     from .common import act_spec, act_spec_seq, shard_hint
     B, S, _ = x.shape
     d_rnn = p["wx"]["w"].shape[-1]
@@ -137,6 +144,14 @@ def rglru_block(p: Params, x: jax.Array, *,
           else jnp.zeros((B, xr.shape[-1]), jnp.float32))
     if S == 1:  # decode fast path
         h = (a[:, 0] * h0 + gated[:, 0])[:, None]
+    elif exact_scan:
+        def step(hc, xs):
+            at, gt = xs
+            hc = at * hc + gt
+            return hc, hc
+        _, h = jax.lax.scan(
+            step, h0, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated, 1, 0)))
+        h = jnp.moveaxis(h, 0, 1)
     else:
         h = _rglru_scan(gated, a, h0)
 

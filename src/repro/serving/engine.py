@@ -20,19 +20,38 @@ change anyone's output.
 Production pattern (vLLM-style, TPU-adapted):
   * fixed-shape request slots (``max_batch``) so every decode step hits the
     same compiled executable — no shape churn;
-  * prefill pads prompts to ``prefill_chunk`` buckets (one compile per
-    bucket, not per request) and installs caches/recurrent states into a
-    free slot — new requests join between decode steps (continuous
-    batching);
-  * decode advances ALL active slots one token per call (per-slot position
-    vector);
+  * chunked parallel prefill (paged engine): prompts are processed in
+    chunks of up to ``prefill_chunk`` tokens, one batched forward per
+    chunk (``forward_paged_chunk``) — every non-attention GEMM runs once
+    at m=chunk and attention attends the whole chunk against the paged
+    cache with an in-chunk causal mask.  The chunk's quantized KV goes
+    through the same per-token bump-rescale recurrence as decode, so the
+    resulting cache (codes AND exponents) is bit-identical to the old
+    token-by-token scan.  Chunk sizes are snapped to powers of two, so
+    the chunk body compiles for at most log2(prefill_chunk)+1 shapes;
+  * token-budget steps: each engine heartbeat spends up to
+    ``prefill_token_budget`` prompt tokens (default: ``prefill_chunk *
+    max_batch`` — one chunk per slot) on mid-prefill slots before running
+    the decode batch, so prefill of long prompts interleaves with
+    in-flight decodes instead of stalling them.  Raise ``prefill_chunk``
+    for prompt-heavy loads — TTFT drops roughly with the chunk count per
+    prompt; lower the budget when decode-latency jitter matters more
+    than TTFT (a budget of one chunk serializes prompt admission across
+    slots and multiplies TTFT by the mid-prefill slot count);
+  * decode advances ALL decoding slots one token per call (per-slot
+    position vector); slots still mid-prefill ride along masked out —
+    zeroed page-table rows land their writes on the null page and their
+    per-slot state reverts after the step;
   * finished slots are freed and re-usable; requests stop on
     ``max_new_tokens``, cache capacity, or their ``eos_token``;
   * eviction (paged engine): when the page pool runs dry mid-decode the
     latest-admitted request is preempted and requeued at the front; on
     re-admission it re-prefills over prompt + generated tokens, which is
-    bit-identical to the uninterrupted decode because the prefill body IS
-    the decode body;
+    bit-identical to the uninterrupted decode because the chunked prefill
+    matches the decode recurrence bit-for-bit.  A prefill that cannot
+    grow its next chunk's pages (and has no later-admitted victim to
+    evict) simply pauses at the chunk boundary, keeping its slot and
+    pages, and resumes from ``pos`` next heartbeat;
   * standalone INT8 KV cache helpers (APSQ-style PO2 scales applied to
     whole cache tensors — ``quantize_kv``/``dequantize_kv``).
 
@@ -65,6 +84,7 @@ launcher's ``serve.py`` runs it; the dry-run lowers ``serve_step`` from
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -74,9 +94,11 @@ from repro.models.config import ModelConfig
 from repro.models.model import (
     decode_step,
     decode_step_paged,
+    forward_paged_chunk,
     init_decode_state,
     init_paged_decode_state,
 )
+from .paged_cache import NULL_PAGE
 
 
 @dataclasses.dataclass
@@ -307,17 +329,31 @@ class PagedServingEngine:
 
     Same host API as ``ServingEngine`` (``Request`` in, ``step``/``run``
     out) but requests are queued through the ``repro.serving.scheduler``:
-    admission waits for a slot + the prompt's pages, decode grows each
-    slot's page list on demand, and a dry pool preempts the
-    latest-admitted request (requeued at the front; resume re-prefills
-    prompt + generated and is bit-identical).  ``page_size`` doubles as
-    the attention kernel's ``block_s`` tile.
+    admission waits for a slot + the FIRST prefill chunk's pages, prompts
+    prefill chunk-by-chunk under a per-step token budget (interleaved
+    with the decode batch), decode grows each slot's page list on demand,
+    and a dry pool preempts the latest-admitted request (requeued at the
+    front; resume re-prefills prompt + generated and is bit-identical).
+    ``page_size`` doubles as the attention kernel's ``block_s`` tile.
+
+    Knobs (see the module docstring for when to turn them):
+      * ``prefill_chunk``        — max tokens per prefill forward; the
+        chunk rides the m axis of every GEMM and the query-row axis of
+        the attention kernel.  Raise it to cut TTFT on prompt-heavy
+        loads; 1 degenerates to the old token-by-token prefill.
+      * ``prefill_token_budget`` — prompt tokens spent per ``step()``
+        across all mid-prefill slots (default ``prefill_chunk *
+        max_batch``: every slot advances one chunk per heartbeat).
+        Lower it to bound decode-step latency jitter at the cost of
+        slower prompt-backlog draining (and so higher TTFT).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
                  page_size: int = 16, n_pages: int = 128,
                  max_pages_per_slot: int | None = None,
-                 prefill_chunk: int = 16, mesh=None, greedy: bool = True,
+                 prefill_chunk: int = 16,
+                 prefill_token_budget: int | None = None,
+                 mesh=None, greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0, backend="auto"):
         from repro.exec import get_backend
         from .scheduler import Scheduler
@@ -329,7 +365,13 @@ class PagedServingEngine:
         self.cfg = cfg
         self.max_batch = max_batch
         self.page_size = page_size
-        self.prefill_chunk = prefill_chunk
+        self.prefill_chunk = max(int(prefill_chunk), 1)
+        # Default budget: every slot can advance one full chunk per step.
+        # A budget of one chunk TOTAL would serialize prompt admission
+        # across slots and multiply TTFT by the mid-prefill slot count.
+        self.prefill_token_budget = max(
+            int(prefill_token_budget) if prefill_token_budget
+            else self.prefill_chunk * max_batch, 1)
         self.mesh = mesh
         self.greedy = greedy
         self.temperature = temperature
@@ -341,10 +383,17 @@ class PagedServingEngine:
                                              n_pages=n_pages)
         self.sched = Scheduler(max_slots=max_batch, n_pages=n_pages,
                                page_size=page_size,
-                               max_pages_per_slot=max_pages_per_slot)
+                               max_pages_per_slot=max_pages_per_slot,
+                               admit_chunk=self.prefill_chunk)
         self.pos = np.zeros(max_batch, np.int32)      # next position per slot
+        # Mid-prefill bookkeeping: slot -> full resume stream (prompt +
+        # pre-preemption output).  While a slot is here, ``pos[slot]`` is
+        # its prefilled_len — the last completed chunk boundary.
+        self._mid_prefill: dict[int, np.ndarray] = {}
+        self.prefill_tokens = 0      # prompt tokens pushed through chunks
+        self.prefill_seconds = 0.0   # wall time inside chunk forwards
         self._decode = jax.jit(self._decode_impl)
-        self._prefill = jax.jit(self._prefill_impl)
+        self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
 
     @classmethod
     def from_exported(cls, params, cfg: ModelConfig, *, policy=None, **kw):
@@ -356,51 +405,61 @@ class PagedServingEngine:
 
     # -- jitted bodies ------------------------------------------------------
 
-    def _prefill_impl(self, params, state, tokens, slot, length, table_row):
-        """Prefill one slot against the shared page pools.
+    def _prefill_chunk_impl(self, params, state, tokens, slot, start,
+                            table_row):
+        """Prefill ONE chunk of one slot against the shared page pools.
 
-        The prefill body IS the decode body (``decode_step_paged`` over a
-        fresh per-slot state, pools taken live), scanned over the padded
-        prompt with updates masked beyond ``length`` — so a resumed
-        (preempted) request recomputes exactly the cache it lost."""
+        tokens [1, C] (every token valid — chunk sizes are exact);
+        ``slot``/``start`` traced scalars; ``table_row`` [1, n_max].  One
+        batched ``forward_paged_chunk`` whose paged-cache writes replay
+        the per-token bump-rescale recurrence, so the pools and running
+        exponents end bit-identical to C single-token decode steps — a
+        resumed (preempted) request recomputes exactly the cache it
+        lost.  ``start == 0`` (first chunk) resets the slot's per-slot
+        leaves (exponents, recurrent states) left by a prior occupant."""
         cfg = self.cfg
         axes = _paged_axes_tree(state, cfg.scan_layers)
         fresh = init_paged_decode_state(cfg, 1, page_size=self.page_size,
                                         n_pages=1)  # pools unused
-        sub = jax.tree.map(lambda full, fr, ax: full if ax == -1 else fr,
-                           state, fresh, axes)
-
-        def body(carry, tok_pos):
-            st, lg = carry
-            tok, pos = tok_pos
-            lg2, st2 = decode_step_paged(params, cfg, st, tok[None, None],
-                                         pos[None], table_row,
-                                         mesh=self.mesh,
-                                         backend=self.backend)
-            valid = pos < length
-            st = jax.tree.map(lambda a, b: jnp.where(valid, b, a), st, st2)
-            lg = jnp.where(pos == length - 1, lg2[:, -1].astype(lg.dtype), lg)
-            return (st, lg), ()
-
-        lg0 = jnp.zeros((1, cfg.vocab), jnp.float32)
-        (st, lg), _ = jax.lax.scan(
-            body, (sub, lg0),
-            (tokens[0], jnp.arange(tokens.shape[1], dtype=jnp.int32)))
+        sub = jax.tree.map(
+            lambda full, fr, ax: full if ax == -1 else jnp.where(
+                start == 0, fr,
+                jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=ax)),
+            state, fresh, axes)
+        lg, st = forward_paged_chunk(
+            params, cfg, sub, tokens,
+            jnp.full((1,), start, jnp.int32), table_row,
+            mesh=self.mesh, backend=self.backend)
         new_state = jax.tree.map(
             lambda full, s, ax: s if ax == -1
             else jax.lax.dynamic_update_slice_in_dim(
                 full, s.astype(full.dtype), slot, axis=ax),
             state, st, axes)
-        return new_state, lg
+        return new_state, lg[:, -1]
 
-    def _decode_impl(self, params, state, tokens, pos, table, rng):
+    def _decode_impl(self, params, state, tokens, pos, table, active, rng):
         """One decode step for all slots.  tokens [B, 1]; pos [B];
-        table [B, n_max].  Pools are shared, so this is one batched
+        table [B, n_max]; active [B] bool (False = empty or mid-prefill
+        slot).  Pools are shared, so this is one batched
         ``decode_step_paged`` (no vmap): inactive slots carry all-null
-        table rows and their writes land on the masked null page."""
+        table rows (the host zeroes them) so their writes land on the
+        masked null page, and their per-slot leaves — running exponents,
+        recurrent states — are reverted below, so riding along in the
+        batch cannot disturb a slot that is not decoding."""
+        cfg = self.cfg
         logits, new_state = decode_step_paged(
-            params, self.cfg, state, tokens, pos, table, mesh=self.mesh,
+            params, cfg, state, tokens, pos, table, mesh=self.mesh,
             backend=self.backend)
+        axes = _paged_axes_tree(state, cfg.scan_layers)
+
+        def keep(old, new, ax):
+            if ax == -1:
+                return new
+            m = active.reshape((1,) * ax + (-1,)
+                               + (1,) * (new.ndim - ax - 1))
+            return jnp.where(m, new, old)
+
+        new_state = jax.tree.map(keep, state, new_state, axes)
         logits = logits[:, -1] / jnp.maximum(self.temperature, 1e-6)
         if self.greedy:
             nxt = jnp.argmax(logits, axis=-1)
@@ -416,31 +475,87 @@ class PagedServingEngine:
         return True
 
     def _admit(self) -> None:
-        """Admit queued requests while a slot + prompt pages are free."""
+        """Admit queued requests while a slot + the FIRST chunk's pages
+        are free.  Admission only books the slot; the prompt itself runs
+        chunk-by-chunk in ``_prefill_step`` (later pages grow per chunk)."""
         while True:
             got = self.sched.admit_next()
             if got is None:
                 return
             slot, req, resume = got
-            L = int(len(resume))
-            pad = -L % self.prefill_chunk
-            toks = np.pad(resume, (0, pad))[None]
-            self.state, logits = self._prefill(
-                self.params, self.state, jnp.asarray(toks),
-                jnp.asarray(slot, jnp.int32), jnp.asarray(L, jnp.int32),
-                jnp.asarray(self.sched.table[slot:slot + 1]))
-            self.pos[slot] = L
-            req.out.append(int(jnp.argmax(logits[0])))
-            if len(req.out) >= req.max_new_tokens or req.hit_eos():
-                req.done = True  # swept by the caller before decode
+            self._mid_prefill[slot] = np.asarray(resume, np.int32)
+            self.pos[slot] = 0
+
+    def _preempt(self, slot: int) -> None:
+        """Preempt a slot (decoding or mid-prefill), releasing its pages.
+        Its request requeues at the front; a mid-prefill victim loses its
+        chunk progress and re-prefills from scratch on re-admission."""
+        self._mid_prefill.pop(slot, None)
+        self.sched.preempt(slot)
+
+    def _grow_range(self, slot: int, start: int, end: int) -> bool:
+        """Ensure pages exist for positions [start, end).  A dry pool
+        evicts only slots admitted LATER than ``slot`` (so prefill never
+        steals from older work); False means pause at this chunk
+        boundary — the slot keeps its pages and resumes next step."""
+        P = self.page_size
+        for p in range(start - start % P, end, P):
+            while not self.sched.grow(slot, p):
+                victim = self.sched.evict_candidate(exclude=slot)
+                if victim is None or (self.sched._admitted_at[victim]
+                                      <= self.sched._admitted_at[slot]):
+                    return False
+                self._preempt(victim)
+        return True
+
+    def _prefill_step(self) -> None:
+        """Advance mid-prefill slots, oldest first, spending at most
+        ``prefill_token_budget`` prompt tokens.  Chunk sizes are powers
+        of two <= ``prefill_chunk`` (so every chunk is fully valid — no
+        pad masking — and the chunk body compiles for at most
+        log2(prefill_chunk)+1 shapes).  The final chunk's logits produce
+        the request's first output token, exactly like a decode step."""
+        budget = self.prefill_token_budget
+        order = sorted(self._mid_prefill,
+                       key=lambda s: self.sched._admitted_at[s])
+        for s in order:
+            if s not in self._mid_prefill:            # evicted by a grow
+                continue
+            resume = self._mid_prefill[s]
+            while budget > 0 and int(self.pos[s]) < len(resume):
+                done = int(self.pos[s])
+                c = min(self.prefill_chunk, len(resume) - done, budget)
+                c = 1 << (c.bit_length() - 1)         # pow2 chunk sizes
+                if not self._grow_range(s, done, done + c):
+                    return                            # pool dry: pause
+                t0 = time.perf_counter()
+                self.state, logits = self._prefill_chunk(
+                    self.params, self.state,
+                    jnp.asarray(resume[done:done + c][None]),
+                    jnp.asarray(s, jnp.int32), jnp.asarray(done, jnp.int32),
+                    jnp.asarray(self.sched.table[s:s + 1]))
+                logits.block_until_ready()
+                self.prefill_seconds += time.perf_counter() - t0
+                self.prefill_tokens += c
+                self.pos[s] = done + c
+                budget -= c
+                if done + c == len(resume):           # prompt fully cached
+                    req = self.sched.slots[s]
+                    req.out.append(int(jnp.argmax(logits[0])))
+                    del self._mid_prefill[s]
+                    if len(req.out) >= req.max_new_tokens or req.hit_eos():
+                        req.done = True               # swept by step()
+            if budget <= 0:
+                return
 
     def _ensure_capacity(self) -> list:
-        """Grow each active slot's page list for its next write; a dry
+        """Grow each decoding slot's page list for its next write; a dry
         pool preempts latest-admitted requests until the write fits.
         Returns slots finished by running out of page budget."""
         finished = []
         order = sorted(
-            (s for s, r in enumerate(self.sched.slots) if r is not None),
+            (s for s, r in enumerate(self.sched.slots)
+             if r is not None and s not in self._mid_prefill),
             key=lambda s: self.sched._admitted_at[s])
         for s in order:                               # oldest first
             if self.sched.slots[s] is None:           # evicted below
@@ -454,31 +569,53 @@ class PagedServingEngine:
                 victim = self.sched.evict_candidate()
                 if victim is None or victim == s:
                     if victim == s:                   # newest = itself
-                        self.sched.preempt(s)
+                        self._preempt(s)
                         break
                     raise RuntimeError("page pool dry with no evictable slot")
-                self.sched.preempt(victim)
+                self._preempt(victim)
         return finished
 
-    def step(self) -> list:
-        """One continuous-batching heartbeat: sweep finished, admit,
-        ensure pages (evicting if dry), decode every active slot."""
-        finished = []
+    def _admit_and_prefill(self) -> list:
+        """Admit + prefill + sweep requests finished on their prefill
+        token.  Runs at the top of every step AND again after the decode
+        sweep, so a slot freed by a finishing stream starts (and usually
+        completes) its successor's prefill in the same heartbeat instead
+        of idling until the next one — under slot contention that saves
+        one full decode step of TTFT per queued request."""
         self._admit()
+        self._prefill_step()
+        finished = []
         for s, r in enumerate(self.sched.slots):
             if r is not None and r.done:              # done on prefill token
                 finished.append(self.sched.finish(s))
+        return finished
+
+    def step(self) -> list:
+        """One continuous-batching heartbeat: admit (slot + first-chunk
+        pages), spend the prefill token budget on mid-prefill slots,
+        sweep requests finished on their prefill token, ensure decode
+        pages (evicting if dry), then one masked batched decode over
+        every decoding slot (mid-prefill slots ride along inert), and
+        finally re-admit into any slots the decode sweep freed."""
+        finished = self._admit_and_prefill()
         finished.extend(self._ensure_capacity())
-        active = [s for s, r in enumerate(self.sched.slots) if r is not None]
+        active = [s for s, r in enumerate(self.sched.slots)
+                  if r is not None and s not in self._mid_prefill]
         if not active:
             return finished
         tokens = np.zeros((self.max_batch, 1), np.int32)
+        mask = np.zeros(self.max_batch, np.bool_)
         for s in active:
             tokens[s, 0] = self.sched.slots[s].out[-1]
+            mask[s] = True
+        # Zero the table rows of non-decoding slots: their (garbage)
+        # writes land on the null page instead of live cache pages.
+        table = np.where(mask[:, None], self.sched.table, NULL_PAGE)
         self.rng, sub = jax.random.split(self.rng)
         nxt, self.state = self._decode(
             self.params, self.state, jnp.asarray(tokens),
-            jnp.asarray(self.pos), jnp.asarray(self.sched.table), sub)
+            jnp.asarray(self.pos), jnp.asarray(table),
+            jnp.asarray(mask), sub)
         nxt = np.asarray(nxt)
         for s in active:
             r = self.sched.slots[s]
@@ -487,6 +624,8 @@ class PagedServingEngine:
             if len(r.out) >= r.max_new_tokens or r.hit_eos():
                 r.done = True
                 finished.append(self.sched.finish(s))
+        if self.sched.waiting:                        # refill freed slots now
+            finished.extend(self._admit_and_prefill())
         return finished
 
     def run(self, requests: list) -> list:

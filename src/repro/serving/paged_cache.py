@@ -65,6 +65,27 @@ def _shift_codes(codes: jax.Array, shift: jax.Array) -> jax.Array:
     return jnp.clip((c + half) >> sh, -127, 127).astype(jnp.int8)
 
 
+def _bump_token(gathered: jax.Array, exp: jax.Array, x_new: jax.Array,
+                pos: jax.Array):
+    """One token of the running-exponent recurrence on a gathered view.
+
+    gathered: [B, n_max, P, Hkv, hd] int8 (a slot's pages, gathered);
+    exp: [B, Hkv] int32; x_new: [B, 1, Hkv, hd] float; pos: [B] int32.
+    Bumps the exponent to cover the new token, re-quantizes existing codes
+    with the integer round-half-up shift, writes the new token's codes.
+    Both the per-token scan and the chunked writer are iterations of this
+    exact step, which is what makes them bit-identical.
+    """
+    page_size = gathered.shape[2]
+    b_idx = jnp.arange(x_new.shape[0])
+    new_exp = jnp.maximum(exp, po2_exponent(x_new))
+    gathered = _shift_codes(gathered, new_exp - exp)
+    codes = quantize_at(x_new, new_exp)            # [B, 1, Hkv, hd]
+    gathered = gathered.at[b_idx, pos // page_size,
+                           pos % page_size].set(codes[:, 0])
+    return gathered, new_exp
+
+
 def _update_pool(pages: jax.Array, exp: jax.Array, x_new: jax.Array,
                  pos: jax.Array, page_table: jax.Array):
     """Write one token per slot into the paged pool.
@@ -74,15 +95,37 @@ def _update_pool(pages: jax.Array, exp: jax.Array, x_new: jax.Array,
     Returns (pages', exp', gathered [B, n_max, P, Hkv, hd]) — the gathered
     view already contains the new token, so the attention read reuses it.
     """
-    page_size = pages.shape[1]
-    b_idx = jnp.arange(x_new.shape[0])
-    new_exp = jnp.maximum(exp, po2_exponent(x_new))
-    gathered = _shift_codes(pages[page_table], new_exp - exp)
-    codes = quantize_at(x_new, new_exp)            # [B, 1, Hkv, hd]
-    gathered = gathered.at[b_idx, pos // page_size,
-                           pos % page_size].set(codes[:, 0])
+    gathered, new_exp = _bump_token(pages[page_table], exp, x_new, pos)
     pages = pages.at[page_table].set(gathered)
     return pages, new_exp, gathered
+
+
+def _update_pool_chunk(pages: jax.Array, exp: jax.Array, x_new: jax.Array,
+                       pos: jax.Array, page_table: jax.Array):
+    """Write a [chunk] of tokens per slot with the per-token bump sequence.
+
+    x_new: [B, C, Hkv, hd] float; pos: [B] int32 (position of the chunk's
+    FIRST token).  Round-half-up shifts do not compose (shifting by d1
+    then d2 is not shifting by d1+d2), so the chunk writer must replay the
+    exact per-token ``_bump_token`` recurrence the decode scan runs — the
+    pool is gathered once, iterated in registers, scattered once.
+
+    Returns (pages', exp', gathered, exps_seq [C, B, Hkv]) where
+    ``exps_seq[t]`` is the running exponent after the chunk's token ``t``
+    — the attention path uses it to detect mid-chunk bumps.
+    """
+    gathered = pages[page_table]
+
+    def step(carry, xs):
+        g, e = carry
+        xt, t = xs
+        g, e = _bump_token(g, e, xt[:, None], pos + t)
+        return (g, e), e
+
+    xs = (jnp.moveaxis(x_new, 1, 0), jnp.arange(x_new.shape[1]))
+    (gathered, new_exp), exps_seq = jax.lax.scan(step, (gathered, exp), xs)
+    pages = pages.at[page_table].set(gathered)
+    return pages, new_exp, gathered, exps_seq
 
 
 def paged_update_and_attend(cache: dict, q: jax.Array, k_new: jax.Array,
@@ -111,6 +154,77 @@ def paged_update_and_attend(cache: dict, q: jax.Array, k_new: jax.Array,
     v_seq = gv.reshape(b, n_max * page_size, *gv.shape[3:])
     out = execute_kv_attention(q, k_seq, v_seq, k_exp, v_exp, pos + 1,
                                block_s=page_size, backend=backend)
+    return out, {"k_pages": k_pages, "v_pages": v_pages,
+                 "k_exp": k_exp, "v_exp": v_exp}
+
+
+def paged_prefill_chunk_update_and_attend(cache: dict, q: jax.Array,
+                                          k_new: jax.Array, v_new: jax.Array,
+                                          pos: jax.Array,
+                                          page_table: jax.Array, *,
+                                          backend=None):
+    """One prefill chunk against the paged INT8 cache: write C tokens,
+    attend C causal query rows — bit-identical to C iterations of
+    ``paged_update_and_attend``.
+
+    q: [B, C, Hq, hd] float; k_new/v_new: [B, C, Hkv, hd] (roped);
+    pos: [B] int32 — position of the chunk's FIRST token.
+
+    The cache write replays the per-token bump recurrence exactly
+    (``_update_pool_chunk``), so pools and exponents always match the
+    scan.  The attention read has two regimes:
+
+    * **stable** (the overwhelmingly common case): the running exponents
+      after the chunk's first token already cover the whole chunk — every
+      query row then sees the same codes the scan saw, and one chunked
+      ``execute_kv_attention`` call with the in-chunk causal mask is
+      bit-identical.
+    * **mid-chunk bump**: a later token grew an exponent, so the scan's
+      earlier rows attended over *finer* codes than the final view holds
+      (the round-half-up rescale is lossy).  Fall back to replaying the
+      per-row snapshots from the pre-chunk pools — still one fused device
+      computation, selected by ``lax.cond`` so the fast path pays nothing.
+    """
+    from repro.exec import execute_kv_attention
+    pos = jnp.asarray(pos, jnp.int32)
+    chunk = q.shape[1]
+    page_size = cache["k_pages"].shape[1]
+    gk0 = cache["k_pages"][page_table]
+    gv0 = cache["v_pages"][page_table]
+    k_pages, k_exp, gk, k_exps = _update_pool_chunk(
+        cache["k_pages"], cache["k_exp"], k_new, pos, page_table)
+    v_pages, v_exp, gv, v_exps = _update_pool_chunk(
+        cache["v_pages"], cache["v_exp"], v_new, pos, page_table)
+    b, n_max = gk.shape[:2]
+    seq = n_max * page_size
+
+    def attend_stable(_):
+        k_seq = gk.reshape(b, seq, *gk.shape[3:])
+        v_seq = gv.reshape(b, seq, *gv.shape[3:])
+        return execute_kv_attention(q, k_seq, v_seq, k_exp, v_exp,
+                                    pos + chunk, block_s=page_size,
+                                    backend=backend)
+
+    def attend_replay(_):
+        def step(carry, xs):
+            cgk, cke, cgv, cve = carry
+            qt, kt, vt, t = xs
+            cgk, cke = _bump_token(cgk, cke, kt[:, None], pos + t)
+            cgv, cve = _bump_token(cgv, cve, vt[:, None], pos + t)
+            out_t = execute_kv_attention(
+                qt, cgk.reshape(b, seq, *cgk.shape[3:]),
+                cgv.reshape(b, seq, *cgv.shape[3:]), cke, cve,
+                pos + t + 1, block_s=page_size, backend=backend)
+            return (cgk, cke, cgv, cve), out_t
+
+        xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k_new, 1, 0),
+              jnp.moveaxis(v_new, 1, 0), jnp.arange(chunk))
+        carry = (gk0, cache["k_exp"], gv0, cache["v_exp"])
+        _, outs = jax.lax.scan(step, carry, xs)
+        return jnp.moveaxis(outs, 0, 1)            # [B, C, Hq, hd]
+
+    stable = (jnp.all(k_exps[0] == k_exp) & jnp.all(v_exps[0] == v_exp))
+    out = jax.lax.cond(stable, attend_stable, attend_replay, None)
     return out, {"k_pages": k_pages, "v_pages": v_pages,
                  "k_exp": k_exp, "v_exp": v_exp}
 

@@ -11,8 +11,12 @@ Host-side (pure python/numpy) policy layer under ``PagedServingEngine``:
   * ``Scheduler`` — FIFO admission queue plus slot/page bookkeeping:
     - ``submit`` validates a request can ever fit (progress guarantee:
       its full footprint must fit the pool even when running alone);
-    - ``admit_next`` pops the queue head when a slot AND its prompt's
-      pages are available (admission never evicts — it just waits);
+    - ``admit_next`` pops the queue head when a slot AND the pages for
+      the start of its prompt are available (admission never evicts — it
+      just waits).  With ``admit_chunk`` set (the engine passes its
+      ``prefill_chunk``), only the FIRST chunk's pages gate admission;
+      the rest ``grow`` on demand as prefill chunks land, so a long
+      prompt no longer has to reserve its whole footprint up front;
     - ``grow`` allocates the next page of a mid-decode slot, up to
       ``max_pages_per_slot``;
     - ``preempt`` releases a slot mid-decode and requeues its request at
@@ -88,9 +92,11 @@ class Scheduler:
     """Admission queue + slot/page bookkeeping for continuous batching."""
 
     def __init__(self, *, max_slots: int, n_pages: int, page_size: int,
-                 max_pages_per_slot: int | None = None):
+                 max_pages_per_slot: int | None = None,
+                 admit_chunk: int | None = None):
         self.max_slots = max_slots
         self.page_size = page_size
+        self.admit_chunk = admit_chunk
         self.max_pages_per_slot = min(
             n_pages - 1,
             max_pages_per_slot if max_pages_per_slot else n_pages - 1)
@@ -126,13 +132,16 @@ class Scheduler:
         self.waiting.append(req)
 
     def admit_next(self):
-        """Admit the queue head if a slot and its prompt pages are free.
+        """Admit the queue head if a slot and its starting pages are free.
 
         Returns (slot, request, resume_tokens) or None.  ``resume_tokens``
         is the full prefill stream — prompt plus any tokens generated
         before a preemption — so resumed requests recompute their cache
-        exactly.  Admission never evicts: if the pool cannot host the
-        prompt right now, the head waits for running requests to drain.
+        exactly.  Without ``admit_chunk`` the whole prompt's pages gate
+        admission; with it only the first prefill chunk's do (later pages
+        ``grow`` chunk by chunk).  Admission never evicts: if the pool
+        cannot host the start of the prompt right now, the head waits for
+        running requests to drain.
         """
         if not self.waiting:
             return None
@@ -146,7 +155,10 @@ class Scheduler:
              np.asarray(req.out, np.int32)]) if req.out else np.asarray(
                  req.tokens, np.int32)
         # +1: room for the token the prefill's final logits produce.
-        need = self.pages_for(len(resume) + 1)
+        first = len(resume) + 1
+        if self.admit_chunk is not None:
+            first = min(first, max(self.admit_chunk, 1))
+        need = self.pages_for(first)
         pages = self.alloc.alloc(slot, need)
         if pages is None:
             return None

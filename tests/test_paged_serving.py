@@ -12,7 +12,12 @@ import numpy as np
 import pytest
 
 from repro.models.config import ModelConfig
-from repro.models.model import init_lm
+from repro.models.model import (
+    decode_step_paged,
+    forward_paged_chunk,
+    init_lm,
+    init_paged_decode_state,
+)
 from repro.serving import PagedServingEngine, Request
 from repro.serving.paged_cache import (
     EXP_FLOOR,
@@ -216,6 +221,140 @@ def test_paged_engine_pallas_matches_oracle(params):
         outs[str(be)] = {r.uid: r.out for r in done}
     vals = list(outs.values())
     assert vals[0] == vals[1]
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: bit-parity with the token-by-token scan
+# ---------------------------------------------------------------------------
+
+def _scan_vs_chunk(cfg, params, L, chunks, backend, page_size=4, n_pages=16):
+    """Prefill ``L`` prompt tokens token-by-token and as ``chunks``;
+    return (states bit-equal, greedy next tokens equal)."""
+    toks = ((np.arange(L) * 7 + 3) % cfg.vocab).astype(np.int32)
+    n_slot_pages = -(-(L + 1) // page_size)
+    table = jnp.asarray(np.arange(1, n_slot_pages + 1)[None])
+
+    st_a = init_paged_decode_state(cfg, 1, page_size=page_size,
+                                   n_pages=n_pages)
+    for t in range(L):
+        lg_a, st_a = decode_step_paged(
+            params, cfg, st_a, jnp.asarray([[toks[t]]]),
+            jnp.asarray([t]), table, backend=backend)
+
+    st_b = init_paged_decode_state(cfg, 1, page_size=page_size,
+                                   n_pages=n_pages)
+    done = 0
+    for c in chunks:
+        lg_b, st_b = forward_paged_chunk(
+            params, cfg, st_b, jnp.asarray(toks[done:done + c][None]),
+            jnp.asarray([done]), table, backend=backend)
+        done += c
+    assert done == L
+
+    bit_equal = all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(st_a), jax.tree.leaves(st_b)))
+    return bit_equal, (int(jnp.argmax(lg_a[0, -1]))
+                       == int(jnp.argmax(lg_b[0, -1])))
+
+
+@pytest.mark.parametrize("L,chunks", [
+    (13, [8, 4, 1]),     # not a multiple of chunk (8) or page_size (4)
+    (7, [4, 2, 1]),      # not a multiple of page_size
+    (8, [8]),            # single full chunk
+    (5, [1, 1, 1, 1, 1]),  # chunk=1 degenerates to the old per-token path
+])
+def test_chunked_prefill_bit_identical_to_scan(params, L, chunks):
+    """The tentpole acceptance bar: a chunked prefill leaves EXACTLY the
+    cache (INT8 codes via the same per-token bump-rescale, running
+    exponents) and greedy next token that L single-token steps leave."""
+    bit_equal, greedy_same = _scan_vs_chunk(CFG, params, L, chunks, "oracle")
+    assert bit_equal and greedy_same
+
+
+def test_chunked_prefill_bit_identical_pallas(params):
+    from repro.exec import PallasBackend
+    bit_equal, greedy_same = _scan_vs_chunk(
+        CFG, params, 13, [8, 4, 1], PallasBackend(interpret=True))
+    assert bit_equal and greedy_same
+
+
+def test_chunked_prefill_recurrent_arch_bit_identical():
+    """Mixed attn/rwkv/rglru stack: the chunked path must force the exact
+    sequential recurrences (rwkv impl="scan", rglru exact_scan) so the
+    carried states match the per-token scan bit-for-bit even when the
+    config asks for the chunk-parallel WKV."""
+    cfg = ModelConfig(name="m", family="dense", n_layers=3, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab=128,
+                      dtype="float32",
+                      block_pattern=("attn", "rwkv", "rglru"),
+                      d_rnn=32, wkv_impl="chunked", wkv_chunk=4)
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    bit_equal, greedy_same = _scan_vs_chunk(cfg, p, 13, [8, 4, 1], "oracle")
+    assert bit_equal and greedy_same
+
+
+def test_engine_chunk1_matches_chunked(params):
+    """Whole-engine degeneracy: prefill_chunk=1 (the old token-by-token
+    behavior) and a chunked engine produce identical streams."""
+    spec = [(i, _prompt(5 + 3 * i, seed=i), 6) for i in range(3)]
+    outs = {}
+    for chunk in (1, 8):
+        eng = _engine(params, max_batch=3, page_size=4, n_pages=32,
+                      prefill_chunk=chunk)
+        done = eng.run([Request(uid=u, tokens=t, max_new_tokens=n)
+                        for u, t, n in spec])
+        outs[chunk] = {r.uid: r.out for r in done}
+        eng.sched.assert_invariants()
+    assert outs[1] == outs[8]
+
+
+def test_prefill_pauses_at_chunk_boundary_and_resumes(params):
+    """A prefill that cannot grow its next chunk's pages (older slot holds
+    the pool) pauses WITHOUT preemption — it keeps its slot, pages and
+    ``prefilled_len`` — and resumes from the same chunk boundary once the
+    older request drains.  Outputs match a roomy engine exactly."""
+    a = Request(uid=0, tokens=_prompt(8, seed=1), max_new_tokens=4)
+    b = Request(uid=1, tokens=_prompt(12, seed=2), max_new_tokens=4)
+    roomy = _single_stream(params, [(0, a.tokens, 4), (1, b.tokens, 4)])
+
+    eng = _engine(params, max_batch=2, page_size=4, n_pages=5,
+                  prefill_chunk=4)
+    eng.add_request(Request(uid=0, tokens=a.tokens, max_new_tokens=4))
+    eng.add_request(Request(uid=1, tokens=b.tokens, max_new_tokens=4))
+    done, paused, snaps = [], False, []
+    for _ in range(64):
+        done.extend(eng.step())
+        eng.sched.assert_invariants()
+        snap = (dict(eng._mid_prefill).keys(), eng.pos.copy())
+        if snaps:
+            prev_mid, prev_pos = snaps[-1]
+            for s in eng._mid_prefill:
+                if s in prev_mid and eng.pos[s] == prev_pos[s] > 0:
+                    paused = True       # same boundary across two steps
+        snaps.append(snap)
+        if len(done) == 2:
+            break
+    assert len(done) == 2
+    assert paused, "pool never forced a prefill pause"
+    assert eng.sched.stats.preempted == 0  # paused, not evicted
+    assert {r.uid: r.out for r in done} == roomy
+
+
+def test_mid_prefill_preemption_replays_exactly(params):
+    """Full preemption of a mid-prefill slot (decode eviction picks the
+    latest-admitted victim) releases its pages; on re-admission it
+    re-prefills from scratch and still matches the roomy engine."""
+    spec = [(i, _prompt(10 + i, seed=i), 6) for i in range(4)]
+    single = _single_stream(params, spec)
+    eng = _engine(params, max_batch=4, page_size=4, n_pages=8,
+                  prefill_chunk=4, prefill_token_budget=4)
+    done = eng.run([Request(uid=u, tokens=t, max_new_tokens=n)
+                    for u, t, n in spec])
+    assert eng.sched.stats.preempted > 0, "pool was not small enough"
+    assert {r.uid: r.out for r in done} == single
+    eng.sched.assert_invariants()
+    assert eng.sched.alloc.n_free == 7
 
 
 def test_local_window_arch_rejected():
