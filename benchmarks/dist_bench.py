@@ -1,0 +1,161 @@
+"""Distributed integer-serving benchmark: 1 -> 2 -> 8 device scaling.
+
+Serves the same calibrated + exported model through
+``PagedServingEngine.from_exported`` on a single device and on 2- and
+8-way ``("data", "model")`` host meshes (``repro.dist.tp`` shards the
+INT8 code banks and KV pools over "model"), and reports per mesh size:
+
+  * decode tokens/s under both wire modes (``int8`` code collectives vs
+    the ``fp32`` parity-debug fallback),
+  * the per-layer analytic wire-byte table from the engine's
+    ``shard_plan`` (``repro.dist.tp.wire_report`` — the SAME static plan
+    the executors shard with, so the accounting cannot drift from what
+    ran),
+  * the aggregate int8/fp32 byte ratio over the switchable collectives.
+
+Two hard gates run before any number is reported (a wrong engine's
+throughput is worthless):
+
+  * parity — greedy decodes on every mesh, under BOTH wire modes, must
+    be token-identical to the single-device engine;
+  * wire — the switchable-collective byte ratio must be >= 3.5x (the
+    all-APSQ smoke policy makes every quantized GEMM combine a lossless
+    INT8 code gather: exactly 4x fewer bytes than fp32).
+
+Runs on CPU via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(set below BEFORE jax initializes, preserving a caller-provided value).
+``--smoke`` is the CI shape; ``--json BENCH_dist.json`` emits the
+machine-readable record tracked across PRs like the other BENCH files.
+"""
+import argparse
+import json
+import os
+import platform
+import time
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402  (device count must be forced first)
+import numpy as np  # noqa: E402
+
+from repro.core import QuantConfig  # noqa: E402
+from repro.dist.tp import wire_report  # noqa: E402
+from repro.launch.mesh import make_smoke_mesh  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.models.model import init_lm  # noqa: E402
+from repro.quant import calibrate_model  # noqa: E402
+from repro.serving import PagedServingEngine, Request  # noqa: E402
+
+
+def _cfg(smoke: bool) -> ModelConfig:
+    # Dims divisible by 8 so the widest mesh shards every bank AND the
+    # KV head pools; all-APSQ so every GEMM combine is switchable.
+    dm, ff = (64, 128) if smoke else (128, 512)
+    return ModelConfig(name="dist-bench", family="dense", n_layers=2,
+                       d_model=dm, n_heads=8, n_kv_heads=8, d_ff=ff,
+                       vocab=128, dtype="float32", scan_layers=False,
+                       quant=QuantConfig.apsq(gs=2, n_p=4))
+
+
+def _requests(cfg, n, max_new, rng):
+    return [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(4, 14))
+                                        ).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _serve(params, cfg, reqs, *, mesh=None, wire="int8", max_batch=4):
+    eng = PagedServingEngine.from_exported(
+        params, cfg, max_batch=max_batch, page_size=8,
+        n_pages=16 * max_batch + 1, prefill_chunk=8, backend="auto",
+        mesh=mesh, wire=wire)
+    eng.run([Request(uid=-1, tokens=reqs[0].tokens.copy(),
+                     max_new_tokens=2)])          # compile outside the clock
+    t0 = time.perf_counter()
+    done = eng.run([Request(uid=r.uid, tokens=r.tokens.copy(),
+                            max_new_tokens=r.max_new_tokens) for r in reqs])
+    dt = time.perf_counter() - t0
+    outs = tuple(tuple(r.out) for r in sorted(done, key=lambda r: r.uid))
+    toks = sum(len(o) for o in outs)
+    return outs, toks / dt, eng.shard_plan
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+
+    cfg = _cfg(args.smoke)
+    rng = np.random.default_rng(0)
+    reqs = _requests(cfg, args.requests, args.max_new_tokens, rng)
+
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    params = calibrate_model(params, cfg, {"tokens": tok})
+
+    n_dev = len(jax.devices())
+    sizes = [d for d in (1, 2, 8) if d <= n_dev]
+    print(f"[dist_bench] {n_dev} devices -> mesh sizes {sizes}")
+
+    record = {"bench": "dist", "config": cfg.name,
+              "host": platform.node(), "n_devices": n_dev, "meshes": {}}
+    ref_outs, ref_tps, _ = _serve(params, cfg, reqs)
+    record["meshes"]["1"] = {"tokens_per_s": {"int8": ref_tps}}
+    print(f"[dist_bench] d=1            {ref_tps:8.1f} tok/s (reference)")
+
+    parity_ok = True
+    ratios = []
+    for d in sizes:
+        if d == 1:
+            continue
+        mesh = make_smoke_mesh((1, d))
+        entry = {"tokens_per_s": {}, "wire": None}
+        for wire in ("int8", "fp32"):
+            outs, tps, plan = _serve(params, cfg, reqs, mesh=mesh, wire=wire)
+            ok = outs == ref_outs
+            parity_ok &= ok
+            entry["tokens_per_s"][wire] = tps
+            print(f"[dist_bench] d={d} wire={wire} {tps:8.1f} tok/s "
+                  f"parity={'OK' if ok else 'FAIL'}")
+            if wire == "int8":
+                wr = wire_report(plan, m=1)
+                entry["wire"] = wr
+                ratios.append(wr["switchable"]["ratio"])
+                print(f"[dist_bench]   wire bytes/decode-step (m=1): "
+                      f"switchable int8={wr['switchable']['int8']} "
+                      f"fp32={wr['switchable']['fp32']} "
+                      f"ratio={wr['switchable']['ratio']:.2f}x; "
+                      f"total ratio={wr['total']['ratio']:.2f}x")
+        record["meshes"][str(d)] = entry
+
+    min_ratio = min(ratios) if ratios else None
+    record["gate"] = {"parity": parity_ok, "switchable_ratio": min_ratio,
+                      "ratio_floor": 3.5}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"[dist_bench] wrote {args.json}")
+
+    if not parity_ok:
+        raise SystemExit("dist_bench GATE FAILURE: sharded decode diverged "
+                         "from the single-device reference")
+    if min_ratio is not None and min_ratio < 3.5:
+        raise SystemExit(f"dist_bench GATE FAILURE: switchable int8/fp32 "
+                         f"wire ratio {min_ratio:.2f} < 3.5")
+    if ratios:
+        print(f"[dist_bench] gates OK: parity on {len(sizes) - 1} meshes "
+              f"x 2 wire modes; min switchable ratio {min_ratio:.2f}x")
+    else:
+        print("[dist_bench] single device only — scaling + wire gates "
+              "skipped (set XLA_FLAGS=--xla_force_host_platform_"
+              "device_count=8)")
+
+
+if __name__ == "__main__":
+    main()

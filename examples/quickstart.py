@@ -20,6 +20,10 @@
    per-layer (gs, n_p) policies on energy x accuracy, and returns the
    Pareto front.  Full loop:
    ``python -m repro.search.cli --arch tinyllama-1.1b --budget-smoke``.
+8. Serve across a mesh: shard the exported code banks + KV pools over a
+   "model" axis and decode with INT8-on-the-wire collectives, bit-exact
+   vs single-device.  Needs >= 2 devices — rerun with
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` to see it.
 
 Block autotuning: every Pallas launch resolves its (block_m, block_n,
 exponent layout) per shape class through ``repro.kernels.autotune`` —
@@ -198,3 +202,33 @@ print(f"\npaged INT8 serving: {len(done)} streams on 4 slots "
       f"{paged.sched.stats.preempted} preemptions), "
       f"batched == single-stream: {batched0 == ref}")
 assert batched0 == ref
+
+# --- 8. serve across a mesh: tensor/expert-parallel integer serving ----------
+# ``mesh=`` shards the SAME exported tree over the "model" axis —
+# ``repro.dist.tp`` places each code bank by its Algorithm-1 mode (K by
+# whole PSUM tiles for PSQ/W8A8 so int32 partials combine exactly; N for
+# APSQ, whose group-start chain is sequential along K; the expert axis
+# for MoE banks) and the KV pools over kv-heads.  Collectives move INT8
+# codes, not fp32 partials (``wire="fp32"`` is the parity-debug path —
+# same tokens, ~4x the bytes; ``engine.shard_plan`` + ``wire_report``
+# price every collective analytically, see benchmarks/dist_bench.py).
+# Recipe: calibrate -> from_exported(mesh=...) -> decode -> compare
+# against the single-device engine.  Same integers, token-for-token.
+if len(jax.devices()) >= 2:
+    from repro.dist import wire_report
+    from repro.launch.mesh import make_smoke_mesh
+
+    mesh = make_smoke_mesh((1, 2))               # ("data", "model")
+    sharded = PagedServingEngine.from_exported(
+        params, cfg, max_batch=1, page_size=8, n_pages=33,
+        prefill_chunk=8, mesh=mesh, wire="int8")
+    out = sharded.run([Request(uid=0, tokens=(np.arange(5) * 3) % cfg.vocab,
+                               max_new_tokens=6)])[0].out
+    wr = wire_report(sharded.shard_plan, m=1)
+    print(f"mesh-served decode == single-device: {out == ref}; "
+          f"switchable collectives int8/fp32 = "
+          f"{wr['switchable']['ratio'] or 1.0:.1f}x fewer bytes")
+    assert out == ref
+else:
+    print("\nmesh serving: skipped (1 device; set XLA_FLAGS="
+          "--xla_force_host_platform_device_count=2 to run step 8)")

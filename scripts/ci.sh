@@ -20,6 +20,15 @@
 #                                 a heterogeneous member and the winning
 #                                 policy round-trips calibrate -> export ->
 #                                 pallas with parity.
+#   scripts/ci.sh dist            tensor/expert-parallel serving smoke:
+#                                 plan/GEMM/engine parity tests over 2- and
+#                                 8-way host-device meshes, then dist_bench
+#                                 --smoke — sharded greedy decode gated
+#                                 token-identical to single-device under
+#                                 BOTH wire modes, and the switchable
+#                                 int8-vs-fp32 collective byte ratio gated
+#                                 >= 3.5x — before the 1->2->8 scaling
+#                                 numbers land in BENCH_dist.json.
 #   scripts/ci.sh serve           continuous-batching serving smoke: paged
 #                                 INT8 KV cache tests + serving_bench
 #                                 --smoke (64 Poisson streams).  The bench
@@ -64,6 +73,14 @@ elif [[ "${1:-}" == "search" ]]; then
     python -m pytest -q tests/test_search.py "$@"
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m repro.search.cli --arch tinyllama-1.1b --budget-smoke
+elif [[ "${1:-}" == "dist" ]]; then
+    shift
+    python -m pytest -q tests/test_dist_tp.py "$@"
+    # dist_bench hard-gates internally (mesh-vs-single parity under both
+    # wire modes, switchable byte ratio >= 3.5x) before writing the
+    # record; the committed BENCH_dist.json is the tracked trajectory.
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.dist_bench --smoke --json BENCH_dist.json
 elif [[ "${1:-}" == "serve" ]]; then
     shift
     python -m pytest -q tests/test_paged_serving.py tests/test_kernels_kv.py "$@"

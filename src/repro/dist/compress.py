@@ -1,20 +1,27 @@
-"""INT8 gradient compression for the DCN ("pod") axis.
+"""Low-bit gradient compression for the DCN ("pod") axis.
 
 Cross-pod gradient reduction is the one collective that crosses the slow
-data-center network; quantizing each leaf to INT8 with a per-leaf scale
-cuts those bytes 4x.  The trainer composes this inside ``shard_map`` over
-"pod" only — ICI-axis reductions stay in autodiff at full precision.
-Error feedback (caller-held residual) keeps the accumulated quantized sum
-tracking the true sum; see ``tests/test_sharding_roofline.py``.
+data-center network; quantizing each leaf to INT8 (or packed INT4) with a
+per-leaf scale cuts those bytes 4x (8x).  The trainer composes this inside
+``shard_map`` over "pod" only — ICI-axis reductions stay in autodiff at
+full precision.  Error feedback (caller-held residual) keeps the
+accumulated quantized sum tracking the true sum; see
+``tests/test_sharding_roofline.py``.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+SUPPORTED_BITS = (4, 8)
+
 
 def quantize_grad(g: jax.Array, bits: int = 8):
-    """Per-tensor symmetric INT8 codes + float scale for one gradient."""
+    """Per-tensor symmetric low-bit codes + float scale for one gradient.
+
+    Codes are held in an int8 carrier regardless of ``bits`` (the 4-bit
+    wire format packs two codes per byte, see ``pack_int4``).
+    """
     qmax = 2 ** (bits - 1) - 1
     scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / qmax + 1e-30
     codes = jnp.clip(jnp.round(g.astype(jnp.float32) / scale),
@@ -26,25 +33,68 @@ def dequantize_grad(codes: jax.Array, scale: jax.Array) -> jax.Array:
     return codes.astype(jnp.float32) * scale
 
 
-def compress_tree_psum(tree, axis_name: str, bits: int = 8):
-    """Quantize every leaf to INT8, then average across ``axis_name``.
+def pack_int4(codes: jax.Array) -> jax.Array:
+    """Two 4-bit codes (int8 carrier, values in [-8, 7]) per wire byte."""
+    flat = codes.reshape(-1)
+    if flat.size % 2:
+        flat = jnp.pad(flat, (0, 1))
+    hi, lo = flat[0::2], flat[1::2]
+    return (jnp.left_shift(hi, 4) | (lo & 0xF)).astype(jnp.int8)
 
-    The collective moves the INT8 *codes* (all_gather + local
+
+def unpack_int4(packed: jax.Array, size: int, shape: tuple) -> jax.Array:
+    """Inverse of ``pack_int4`` (arithmetic shifts sign-extend exactly)."""
+    hi = jnp.right_shift(packed, 4)
+    lo = ((packed & 0xF) ^ 8) - 8
+    flat = jnp.stack([hi, lo], axis=-1).reshape(-1)[:size]
+    return flat.reshape(shape).astype(jnp.int8)
+
+
+def wire_bytes(n_elements: int, bits: int) -> int:
+    """Actual on-wire payload of one leaf's codes (excl. the fp32 scale)."""
+    return -(-n_elements * bits // 8)
+
+
+def compress_tree_psum(tree, axis_name: str, bits: int = 8):
+    """Quantize every leaf to ``bits`` codes, then average across
+    ``axis_name``.
+
+    The collective moves the *packed codes* (all_gather + local
     dequantize-mean), not dequantized fp32 — each pod holds its own
-    per-leaf scale, so a direct fp32 psum would forfeit the 4x DCN byte
-    saving this module exists for.  Returns ``(tree, info)`` with the
-    wire bytes of both paths.  Must run inside ``shard_map`` (or any
-    context where ``axis_name`` is bound).
+    per-leaf scale, so a direct fp32 psum would forfeit the byte saving
+    this module exists for.  ``bits`` must be one of ``SUPPORTED_BITS``
+    (4-bit packs code pairs into wire bytes; anything else raises —
+    silently widening to 8 would misreport the DCN budget).  Returns
+    ``(tree, info)`` where ``info["wire_bytes"]`` is the actual per-pod
+    payload this call put on the wire (codes at ``bits`` plus one fp32
+    scale per leaf) next to the fp32 baseline; ``info["int8_bytes"]``
+    keeps the legacy 8-bit-path accounting.  Must run inside
+    ``shard_map`` (or any context where ``axis_name`` is bound).
     """
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(
+            f"compress_tree_psum supports bits in {SUPPORTED_BITS}, "
+            f"got {bits} — refusing to silently widen the wire format")
+
     def f(g):
         codes, scale = quantize_grad(g, bits)
-        all_codes = jax.lax.all_gather(codes, axis_name)    # int8 on wire
-        all_scales = jax.lax.all_gather(scale, axis_name)   # one fp32/pod
+        if bits == 4:
+            packed = pack_int4(codes)                       # 2 codes/byte
+            all_packed = jax.lax.all_gather(packed, axis_name)
+            all_codes = jax.vmap(
+                lambda p: unpack_int4(p, codes.size, codes.shape)
+            )(all_packed)
+        else:
+            all_codes = jax.lax.all_gather(codes, axis_name)  # int8 on wire
+        all_scales = jax.lax.all_gather(scale, axis_name)     # one fp32/pod
         deq = all_codes.astype(jnp.float32) * all_scales.reshape(
             (-1,) + (1,) * codes.ndim)
         return jnp.mean(deq, axis=0)
 
     out = jax.tree.map(f, tree)
-    n = sum(int(x.size) for x in jax.tree.leaves(tree))
-    info = {"int8_bytes": n, "fp32_bytes": 4 * n}
+    leaves = jax.tree.leaves(tree)
+    n = sum(int(x.size) for x in leaves)
+    wire = sum(wire_bytes(int(x.size), bits) + 4 for x in leaves)
+    info = {"bits": bits, "wire_bytes": wire,
+            "int8_bytes": n, "fp32_bytes": 4 * n}
     return out, info

@@ -128,8 +128,34 @@ def tree_specs(spec_tree, shape_tree, mesh, rules: dict | None = None):
     NamedShardings and fed to jit in/out_shardings directly).  Quantizer
     state (``repro.core.QuantState``) in the shape tree is paired with the
     ``{"aw","ax","ap"}`` spec dict produced by ``linear_specs``.
+
+    Exported trees work too: a ``DeployedQuantState`` under ``"qp"`` /
+    ``"qp_head"`` / ``"qp_<expert>"`` inherits its *weight codes* spec
+    from the sibling float-weight entry the export dropped (``"w"``, the
+    embedding ``"table"`` — transposed for the tied head — or the expert
+    bank name), with every exponent leaf replicated; spec-tree keys whose
+    params were consumed by the export are simply skipped.  For the
+    serving-side plan (K by whole PSUM tiles, N for APSQ, expert axis for
+    MoE banks) use ``repro.dist.tp.shard_deployed`` instead — this path
+    exists so generic spec tooling keeps working on deployed trees.
     """
-    from repro.core import QuantState  # no cycle: core never imports dist
+    from repro.core import DeployedQuantState, QuantState
+
+    def deployed(sp_dict, key, dq):
+        qspec = sp_dict.get(key) if isinstance(sp_dict, dict) else None
+        if isinstance(qspec, dict) and "w_codes" in qspec:  # explicit form
+            waxes = qspec["w_codes"]
+        else:
+            wkey = ("w" if key == "qp"
+                    else "table" if key == "qp_head" else key[3:])
+            waxes = sp_dict.get(wkey) if isinstance(sp_dict, dict) else None
+            if key == "qp_head" and isinstance(waxes, tuple):
+                waxes = tuple(reversed(waxes))  # codes are [d, vocab]
+        wspec = (spec_for(waxes, tuple(dq.w_codes.shape), mesh, rules)
+                 if isinstance(waxes, tuple) else P())
+        return dataclasses.replace(
+            dq, w_codes=wspec, ax_exp=P(), aw_exp=P(),
+            psum_exps=None if dq.psum_exps is None else P())
 
     def rec(sp, sh, path):
         if isinstance(sp, tuple):
@@ -149,6 +175,13 @@ def tree_specs(spec_tree, shape_tree, mesh, rules: dict | None = None):
             if missing:
                 raise KeyError(f"spec tree missing {sorted(missing)} "
                                f"at {'/'.join(path) or '<root>'}")
+            if isinstance(sh, dict):
+                # Iterate the PARAMS keys: export drops float banks, so
+                # stale spec-tree entries ("w", "wi", ...) are skipped.
+                return {k: (deployed(sp, k, v)
+                            if isinstance(v, DeployedQuantState)
+                            else rec(sp[k], v, path + (k,)))
+                        for k, v in sh.items()}
             return {k: rec(v, sh[k], path + (k,)) for k, v in sp.items()}
         if sp is None:
             return None if sh is None else P()

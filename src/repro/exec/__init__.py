@@ -11,6 +11,7 @@ from .backends import (
     ExecBackend,
     OracleBackend,
     PallasBackend,
+    ShardedBackend,
     available_backends,
     backend_parity_check,
     execute_expert_gemm,
@@ -24,7 +25,8 @@ from .backends import (
 
 __all__ = [
     "AutoBackend", "DEFAULT_BACKEND", "ExecBackend", "OracleBackend",
-    "PallasBackend", "available_backends", "backend_parity_check",
+    "PallasBackend", "ShardedBackend", "available_backends",
+    "backend_parity_check",
     "execute_expert_gemm", "execute_gemm", "execute_kv_attention",
     "get_backend", "kv_block_size", "quantize_activations",
     "register_backend",

@@ -209,6 +209,72 @@ class AutoBackend(ExecBackend):
                                            v_exp, length, block_s=block_s)
 
 
+class ShardedBackend(ExecBackend):
+    """Mesh-parallel integer execution: the local ``inner`` backend per
+    shard, INT8-on-the-wire combines between shards.
+
+    Wraps any leaf backend (``oracle``/``pallas``/an instance) and runs it
+    inside ``repro.dist.shard_map`` over the mesh's ``model`` axis, with
+    the shard axis chosen per layer by ``repro.dist.tp.plan_gemm`` from
+    the same static shapes ``tp.shard_deployed`` placed the codes with:
+    PSQ layers K-shard by whole PSUM tiles (int32 ``psum_scatter`` + int8
+    code gather), APSQ layers column-parallel over N (lossless int8 code
+    ``all_gather`` — the output is a code times the static ``2^e_last``),
+    W8A8 K-shards with a full-precision int32 psum, MoE expert banks run
+    expert-parallel with an int8 code gather as the all-to-all, and KV
+    attention splits heads.  Every path is bit-exact to ``inner`` on one
+    device; ``wire="fp32"`` swaps the int8 collectives for 4-byte gathers
+    (identical results — the parity-debugging fallback ``dist_bench``
+    prices the int8 path against).
+
+    The registered ``backend="sharded"`` instance has no mesh and simply
+    delegates to ``auto`` — construct ``ShardedBackend(mesh=...)`` (or
+    pass ``mesh=`` to ``PagedServingEngine``, which wraps its backend
+    automatically) for real multi-device serving.
+    """
+
+    name = "sharded"
+
+    def __init__(self, mesh=None, inner="auto", *,
+                 model_axis: str = "model", wire: str = "int8"):
+        if wire not in ("int8", "fp32"):
+            raise ValueError(f"wire must be 'int8' or 'fp32', got {wire!r}")
+        self.mesh = mesh
+        self.inner = inner
+        self.model_axis = model_axis
+        self.wire = wire
+
+    def _leaf(self) -> ExecBackend:
+        return get_backend(self.inner).resolve()
+
+    def int_gemm(self, x_codes, w_codes, psum_exps, *, gs):
+        if self.mesh is None:
+            return self._leaf().int_gemm(x_codes, w_codes, psum_exps, gs=gs)
+        from repro.dist.tp import sharded_int_gemm  # lazy: dist -> kernels
+        return sharded_int_gemm(self.mesh, self._leaf(), x_codes, w_codes,
+                                psum_exps, gs=gs, model_axis=self.model_axis,
+                                wire=self.wire)
+
+    def int_expert_gemm(self, x_codes, w_codes, psum_exps, *, gs):
+        if self.mesh is None:
+            return self._leaf().int_expert_gemm(x_codes, w_codes, psum_exps,
+                                                gs=gs)
+        from repro.dist.tp import sharded_int_expert_gemm
+        return sharded_int_expert_gemm(
+            self.mesh, self._leaf(), x_codes, w_codes, psum_exps, gs=gs,
+            model_axis=self.model_axis, wire=self.wire)
+
+    def kv_attention(self, q, k_codes, v_codes, k_exp, v_exp, length, *,
+                     block_s):
+        if self.mesh is None:
+            return self._leaf().kv_attention(q, k_codes, v_codes, k_exp,
+                                             v_exp, length, block_s=block_s)
+        from repro.dist.tp import sharded_kv_attention
+        return sharded_kv_attention(
+            self.mesh, self._leaf(), q, k_codes, v_codes, k_exp, v_exp,
+            length, block_s=block_s, model_axis=self.model_axis)
+
+
 # ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
@@ -223,6 +289,7 @@ def register_backend(name: str, backend: ExecBackend) -> None:
 register_backend("oracle", OracleBackend())
 register_backend("pallas", PallasBackend())
 register_backend("auto", AutoBackend())
+register_backend("sharded", ShardedBackend())
 
 DEFAULT_BACKEND = "auto"
 

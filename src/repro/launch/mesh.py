@@ -12,6 +12,8 @@ moment sharding target "pod" (see repro.dist).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 
 
@@ -21,7 +23,26 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_smoke_mesh():
-    """1-device mesh with the production axis names (CPU tests)."""
-    n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"))
+def make_smoke_mesh(shape=None, axes=("data", "model")):
+    """Small mesh with production axis names over CPU host devices.
+
+    ``make_smoke_mesh()`` keeps the historical default — ``(1, n)`` over
+    every available device — but a requested ``shape``/``axes`` pair is
+    honored exactly (using the first ``prod(shape)`` devices), so dist
+    tests can run 2/4/8-way and multi-pod smoke shapes like
+    ``make_smoke_mesh((2, 2, 2), ("pod", "data", "model"))`` under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    devs = jax.devices()
+    if shape is None:
+        shape = (1, len(devs))
+    shape = tuple(int(s) for s in shape)
+    axes = tuple(axes)
+    if len(shape) != len(axes):
+        raise ValueError(f"shape {shape} / axes {axes} rank mismatch")
+    need = math.prod(shape)
+    if need > len(devs):
+        raise ValueError(f"mesh {shape} needs {need} devices, "
+                         f"have {len(devs)} (set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count=N)")
+    return jax.make_mesh(shape, axes, devices=devs[:need])

@@ -30,6 +30,19 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--backend", default="auto",
                     help="exec backend for integer ops: auto|oracle|pallas")
+    ap.add_argument("--mesh", default=None, metavar="SHAPE",
+                    help="serve across a device mesh, e.g. '1x2' "
+                         "(data x model) or '2x1x2' (pod x data x model). "
+                         "Implies --engine paged --exported; the model "
+                         "axis shards INT8 code banks + KV head pools "
+                         "(repro.dist.tp).  Off-TPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first.")
+    ap.add_argument("--wire", choices=("int8", "fp32"), default="int8",
+                    help="collective payload for sharded serving: int8 "
+                         "codes (default) or the fp32 parity-debug path")
+    ap.add_argument("--exported", action="store_true",
+                    help="calibrate + export to INT8 codes and serve "
+                         "through the integer kernel path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -41,7 +54,33 @@ def main():
     if cfg.encdec:
         raise SystemExit("enc-dec serving requires encoder inputs; use the "
                          "examples/serve.py driver for seamless")
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_smoke_mesh
+        shape = tuple(int(s) for s in args.mesh.lower().split("x"))
+        axes = (("pod", "data", "model") if len(shape) == 3
+                else ("data", "model"))
+        mesh = make_smoke_mesh(shape, axes)
+        args.engine = "paged"
+        args.exported = True
+        print(f"[serve] mesh {dict(mesh.shape)} wire={args.wire}")
+
+    if args.exported and (cfg.quant is None or not cfg.quant.enabled):
+        # Integer serving needs quantizer state; default to the paper's
+        # APSQ preset when the arch config ships without one.
+        from repro.core import QuantConfig
+        cfg = cfg.with_quant(QuantConfig.apsq(gs=2, n_p=4))
+        print(f"[serve] {args.arch} has quant disabled -> "
+              f"applying apsq(gs=2, n_p=4) for --exported")
     params = init_lm(jax.random.PRNGKey(args.seed), cfg)
+
+    if args.exported:
+        from repro.quant import calibrate_model
+        rng_cal = np.random.default_rng(args.seed)
+        tok = rng_cal.integers(0, cfg.vocab, size=(2, 32))
+        params = calibrate_model(params, cfg, {"tokens": jax.numpy.asarray(
+            tok, jax.numpy.int32)})
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
@@ -52,13 +91,21 @@ def main():
 
     if args.engine == "paged":
         n_pages = args.cache_len // args.page_size * args.max_batch + 1
-        engine = PagedServingEngine(params, cfg, max_batch=args.max_batch,
-                                    page_size=args.page_size,
-                                    n_pages=n_pages, backend=args.backend)
+        kw = dict(max_batch=args.max_batch, page_size=args.page_size,
+                  n_pages=n_pages, backend=args.backend, mesh=mesh,
+                  wire=args.wire)
+        engine = (PagedServingEngine.from_exported(params, cfg, **kw)
+                  if args.exported else
+                  PagedServingEngine(params, cfg, **kw))
     else:
-        engine = ServingEngine(params, cfg, max_batch=args.max_batch,
-                               cache_len=args.cache_len,
-                               backend=args.backend)
+        if args.exported:
+            engine = ServingEngine.from_exported(
+                params, cfg, max_batch=args.max_batch,
+                cache_len=args.cache_len, backend=args.backend)
+        else:
+            engine = ServingEngine(params, cfg, max_batch=args.max_batch,
+                                   cache_len=args.cache_len,
+                                   backend=args.backend)
     t0 = time.perf_counter()
     done = engine.run(reqs)
     dt = time.perf_counter() - t0

@@ -241,12 +241,20 @@ def apply_layer(
 
     h2 = apply_norm(p["ln2"], x, cfg.norm)
     if cfg.mlp == "moe":
-        if mesh is not None:
+        from repro.core import DeployedQuantState
+        deployed_moe = isinstance(p["ffn"].get("qp_wi"), DeployedQuantState)
+        if mesh is not None and not deployed_moe:
             y = moe_ffn_sharded(p["ffn"], h2, mesh=mesh,
                                 n_experts=cfg.n_experts, top_k=cfg.top_k,
                                 capacity_factor=cfg.capacity_factor,
                                 quant=quant, backend=backend)
         else:
+            # Deployed expert banks: EP lives INSIDE the backend
+            # (``ShardedBackend.int_expert_gemm`` shard_maps the expert
+            # axis and gathers outputs as INT8 codes), so the pure path
+            # is the right wrapper — ``moe_ffn_sharded``'s fp32 psum
+            # combine would both double-wrap shard_map and lose the
+            # int8-on-the-wire saving.
             y = moe_ffn(p["ffn"], h2, n_experts=cfg.n_experts,
                         top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
                         quant=quant, tap=tap, backend=backend)

@@ -354,7 +354,8 @@ class PagedServingEngine:
                  prefill_chunk: int = 16,
                  prefill_token_budget: int | None = None,
                  mesh=None, greedy: bool = True,
-                 temperature: float = 1.0, seed: int = 0, backend="auto"):
+                 temperature: float = 1.0, seed: int = 0, backend="auto",
+                 wire: str = "int8"):
         from repro.exec import get_backend
         from .scheduler import Scheduler
         if any(k == "local" for k in cfg.block_pattern) or cfg.softcap:
@@ -381,6 +382,23 @@ class PagedServingEngine:
         self.state = init_paged_decode_state(cfg, max_batch,
                                              page_size=page_size,
                                              n_pages=n_pages)
+        # Multi-device integer serving: wrap the backend in the mesh-
+        # parallel executor (repro.dist.tp plans the per-layer shard axis
+        # from Algorithm-1 semantics), commit the exported code banks to
+        # their shards, and shard the KV pools over kv-heads.  The plan's
+        # analytic wire report lands on ``self.shard_plan`` for
+        # ``benchmarks/dist_bench.py``.  ``wire="fp32"`` keeps identical
+        # outputs but full-precision collectives (parity debugging).
+        self.shard_plan = None
+        if mesh is not None:
+            from repro.dist.tp import shard_deployed, shard_paged_state
+            from repro.exec import ShardedBackend
+            if not isinstance(self.backend, ShardedBackend):
+                self.backend = ShardedBackend(mesh=mesh, inner=self.backend,
+                                              wire=wire)
+            self.params, self.shard_plan = shard_deployed(params, mesh)
+            self.state, attn_plans = shard_paged_state(self.state, cfg, mesh)
+            self.shard_plan.update(attn_plans)
         self.sched = Scheduler(max_slots=max_batch, n_pages=n_pages,
                                page_size=page_size,
                                max_pages_per_slot=max_pages_per_slot,

@@ -1,0 +1,11 @@
+"""Shared test bootstrap.
+
+Forces 8 CPU host devices (before any jax import) so the dist tests in
+``test_dist_tp.py`` can build 2- and 8-way meshes; single-device tests
+are unaffected — unsharded computation runs on device 0 as before.
+Honors a caller-provided XLA_FLAGS (setdefault, no override).
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
