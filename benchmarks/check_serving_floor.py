@@ -11,10 +11,21 @@ matched on (streams, max_batch); each match must hold
 
 and the fresh run's parity record must be all-green (a throughput number
 from an engine that diverged from the single-stream oracle is
-worthless).  Wall-clock on a shared CI box is noisy, so the default
-slack is generous — the gate exists to catch scheduler/prefill
-regressions that cost multiples (e.g. re-serializing the chunked
-prefill), not 10% jitter.
+worthless) — including ``horizon_eq_stepwise``, the fused-decode-vs-
+per-token-heartbeat token identity.
+
+The fresh run's ``horizon_sweep`` section is gated internally: the
+largest-horizon cell must hold ``tokens_per_s >= min_horizon_speedup *``
+the horizon-1 cell of the SAME run (``--min-horizon-speedup``, default
+1.0 = no check).  That keeps the on-device decode loop from silently
+degrading back to per-token dispatch economics while staying robust to
+absolute wall-clock noise — the committed BENCH_serving.json documents
+the absolute speedup.
+
+Wall-clock on a shared CI box is noisy, so the default slack is
+generous — the gate exists to catch scheduler/prefill regressions that
+cost multiples (e.g. re-serializing the chunked prefill), not 10%
+jitter.
 
 Exit codes: 0 pass, 1 regression, 2 usage/IO error.  No overlapping
 load records is a warning, not a failure (a floor from before a load
@@ -38,11 +49,51 @@ def _parity_ok(payload: dict) -> bool:
     for rec in payload.get("records", []):
         if rec.get("section") == "parity":
             return bool(rec.get("batched_eq_single")
-                        and rec.get("pallas_eq_oracle"))
+                        and rec.get("pallas_eq_oracle")
+                        # pre-horizon payloads lack the field; treat as ok
+                        and rec.get("horizon_eq_stepwise", True))
     return False
 
 
-def check(new: dict, floor: dict, slack: float, print_fn=print) -> int:
+def _sweep_records(payload: dict) -> dict:
+    """(streams, max_batch, decode_horizon) -> horizon_sweep record."""
+    out = {}
+    for rec in payload.get("records", []):
+        if rec.get("section") != "horizon_sweep":
+            continue
+        out[(rec.get("streams"), rec.get("max_batch"),
+             rec.get("decode_horizon", 1))] = rec
+    return out
+
+
+def _check_horizon_speedup(new: dict, min_speedup: float,
+                           print_fn=print) -> int:
+    """Within the NEW run: max-horizon cell vs its own horizon-1 cell."""
+    sweep = _sweep_records(new)
+    cells = sorted({(s, b) for s, b, _ in sweep})
+    if not cells:
+        print_fn("floor,WARN,no horizon_sweep records — skipping the "
+                 "horizon speedup check")
+        return 0
+    failures = 0
+    for s, b in cells:
+        hs = sorted(h for s2, b2, h in sweep if (s2, b2) == (s, b))
+        if hs[0] != 1 or len(hs) < 2:
+            continue                    # no baseline to compare against
+        base = sweep[(s, b, 1)].get("tokens_per_s", 0.0)
+        best_h = hs[-1]
+        tps = sweep[(s, b, best_h)].get("tokens_per_s", 0.0)
+        ratio = tps / base if base else float("inf")
+        ok = ratio >= min_speedup
+        print_fn(f"floor,{'ok' if ok else 'FAIL'},horizon_speedup,"
+                 f"streams={s},max_batch={b},h{best_h}/h1={ratio:.2f} "
+                 f"(need >= {min_speedup})")
+        failures += 0 if ok else 1
+    return failures
+
+
+def check(new: dict, floor: dict, slack: float, print_fn=print,
+          min_horizon_speedup: float = 1.0) -> int:
     if not _parity_ok(new):
         print_fn("floor,FAIL,parity record missing or not green — "
                  "refusing to gate throughput of a diverged engine")
@@ -50,11 +101,11 @@ def check(new: dict, floor: dict, slack: float, print_fn=print) -> int:
     new_recs = _load_records(new)
     floor_recs = _load_records(floor)
     overlap = sorted(set(new_recs) & set(floor_recs))
+    failures = _check_horizon_speedup(new, min_horizon_speedup, print_fn)
     if not overlap:
         print_fn("floor,WARN,no overlapping load records — nothing to "
                  "gate (floor predates these load cells?)")
-        return 0
-    failures = 0
+        return 1 if failures else 0
     for key in overlap:
         streams, max_batch = key
         rec, ref = new_recs[key], floor_recs[key]
@@ -69,8 +120,8 @@ def check(new: dict, floor: dict, slack: float, print_fn=print) -> int:
                  f"ttft_p50_ms={ttft} (floor/slack={ttft_need:.1f})")
         failures += 0 if ok else 1
     if failures:
-        print_fn(f"floor,FAIL,{failures}/{len(overlap)} load cells "
-                 f"regressed past the checked-in serving floor")
+        print_fn(f"floor,FAIL,{failures} checks regressed past the "
+                 f"serving floor / horizon speedup bar")
         return 1
     print_fn(f"floor,pass,{len(overlap)} load cells within the serving "
              f"floor")
@@ -86,6 +137,11 @@ def main(argv=None) -> int:
                     help="required fraction of the floor (default 0.25: "
                          "flag >4x regressions, tolerate shared-box "
                          "timing noise)")
+    ap.add_argument("--min-horizon-speedup", type=float, default=1.0,
+                    help="required tokens/s ratio of the largest-horizon "
+                         "sweep cell over the same run's horizon-1 cell "
+                         "(default 1.0: fused decode must at least not "
+                         "lose to per-token dispatch)")
     args = ap.parse_args(argv)
     try:
         with open(args.new_json) as f:
@@ -95,7 +151,8 @@ def main(argv=None) -> int:
     except (OSError, json.JSONDecodeError) as e:
         print(f"floor,ERROR,{e}")
         return 2
-    return check(new, floor, args.slack)
+    return check(new, floor, args.slack,
+                 min_horizon_speedup=args.min_horizon_speedup)
 
 
 if __name__ == "__main__":

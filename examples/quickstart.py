@@ -181,26 +181,42 @@ for pname, pol in [
 # ``repro.exec`` op family (``kv_attention``: Pallas flash-decode kernel
 # on TPU, jnp oracle elsewhere — the chunk rides its query-row axis, the
 # "prefill_attn" autotune class), so weights AND cache are integer end to
-# end.  ``benchmarks/serving_bench.py`` drives this engine with hundreds
-# of Poisson-arrival streams and reports tokens/s, prefill tokens/s and
-# p50/p99; ``benchmarks/check_serving_floor.py`` holds CI to the
-# committed floors.
+# end.  Decode itself runs FUSED: every heartbeat scans up to
+# ``decode_horizon`` (pow2, default 8) decode steps inside one jitted
+# ``lax.scan`` — sampling, per-stream EOS/max-token stops, position
+# advance and KV writes all on device, one host sync per macro-step
+# draining a [batch, horizon] token block.  The scheduler pre-reserves
+# each stream's pages over the horizon and shrinks a stream's budget
+# (never preempting) when the pool is tight.  Raise the horizon when
+# decode is dispatch-bound (host round-trips per token dominate — the
+# usual case once kernels are fast); keep it at 1 for very tight page
+# pools or a strict per-token latency SLO, since tokens surface to the
+# host a macro-step at a time.  H fused steps stay token- AND
+# KV-bit-identical to H single steps, so the parity story is unchanged.
+# ``benchmarks/serving_bench.py`` drives this engine with hundreds of
+# Poisson-arrival streams and reports tokens/s, prefill tokens/s,
+# p50/p99, a host-overhead breakdown, and a --decode-horizon sweep;
+# ``benchmarks/check_serving_floor.py`` holds CI to the committed
+# floors plus the fused-vs-per-token speedup.
 from repro.serving import PagedServingEngine
 
 paged = PagedServingEngine.from_exported(
-    params, cfg, max_batch=4, page_size=8, n_pages=33, prefill_chunk=8)
+    params, cfg, max_batch=4, page_size=8, n_pages=33, prefill_chunk=8,
+    decode_horizon=4)
 streams = [Request(uid=i, tokens=(np.arange(5 + i) * 3) % cfg.vocab,
                    max_new_tokens=6) for i in range(8)]
 done = paged.run(streams)
 solo = PagedServingEngine.from_exported(
-    params, cfg, max_batch=1, page_size=8, n_pages=33, prefill_chunk=8)
+    params, cfg, max_batch=1, page_size=8, n_pages=33, prefill_chunk=8,
+    decode_horizon=1)                      # per-token heartbeat reference
 ref = solo.run([Request(uid=0, tokens=(np.arange(5) * 3) % cfg.vocab,
                         max_new_tokens=6)])[0].out
 batched0 = next(r.out for r in done if r.uid == 0)
 print(f"\npaged INT8 serving: {len(done)} streams on 4 slots "
       f"({paged.sched.stats.admitted} admissions, "
-      f"{paged.sched.stats.preempted} preemptions), "
-      f"batched == single-stream: {batched0 == ref}")
+      f"{paged.sched.stats.preempted} preemptions, "
+      f"{paged.decode_dispatches} fused decode launches), "
+      f"batched h4 == single-stream h1: {batched0 == ref}")
 assert batched0 == ref
 
 # --- 8. serve across a mesh: tensor/expert-parallel integer serving ----------

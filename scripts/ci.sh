@@ -31,18 +31,25 @@
 #                                 numbers land in BENCH_dist.json.
 #   scripts/ci.sh serve           continuous-batching serving smoke: paged
 #                                 INT8 KV cache tests + serving_bench
-#                                 --smoke (64 Poisson streams).  The bench
-#                                 itself gates on backend decode parity —
-#                                 batched == single-stream and oracle ==
-#                                 interpret-mode pallas, token-for-token —
+#                                 --smoke (64 Poisson streams, fused
+#                                 decode_horizon=8 macro-steps, plus a
+#                                 saturated 128-stream decode-bound
+#                                 horizon {1,8} sweep cell).  The bench
+#                                 itself gates on decode parity — batched
+#                                 == single-stream, oracle == interpret-
+#                                 mode pallas, AND fused horizon ==
+#                                 per-token heartbeats, token-for-token —
 #                                 before reporting tokens/s, prefill
-#                                 tokens/s and p50/p99 into
-#                                 BENCH_serving.json.  The fresh run is
-#                                 then gated against the committed
-#                                 BENCH_serving.json tokens/s + ttft_p50
-#                                 floors (check_serving_floor.py), so a
-#                                 scheduler or chunked-prefill regression
-#                                 fails fast like a kernel-geometry one.
+#                                 tokens/s, p50/p99 and the host-overhead
+#                                 breakdown into BENCH_serving.json.  The
+#                                 fresh run is then gated against the
+#                                 committed BENCH_serving.json tokens/s +
+#                                 ttft_p50 floors AND its own h8-vs-h1
+#                                 sweep ratio (check_serving_floor.py
+#                                 --min-horizon-speedup), so a scheduler,
+#                                 chunked-prefill, or decode-fusion
+#                                 regression fails fast like a
+#                                 kernel-geometry one.
 #
 # Collection regressions (missing modules, import errors) fail the run
 # because pytest errors out before running a single test.
@@ -88,10 +95,12 @@ elif [[ "${1:-}" == "serve" ]]; then
     floor="$(mktemp)"
     git show HEAD:BENCH_serving.json > "$floor" 2>/dev/null || floor=""
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-        python -m benchmarks.serving_bench --smoke --json BENCH_serving.json
+        python -m benchmarks.serving_bench --smoke --decode-horizon 8 \
+        --json BENCH_serving.json
     if [[ -n "$floor" ]]; then
         PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-            python -m benchmarks.check_serving_floor BENCH_serving.json "$floor"
+            python -m benchmarks.check_serving_floor BENCH_serving.json \
+            "$floor" --min-horizon-speedup 1.05
         rm -f "$floor"
     else
         echo "floor,WARN,no committed BENCH_serving.json — floor gate skipped"

@@ -28,6 +28,11 @@ def main():
                     help="dense float KV slots, or the paged INT8 KV "
                          "cache with the continuous-batching scheduler")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--decode-horizon", type=int, default=8,
+                    help="fused decode steps per engine heartbeat (pow2). "
+                         "Raise when decode is dispatch-bound; 1 restores "
+                         "the per-token heartbeat (tight page pools, "
+                         "strict per-token SLO).  Paged engine only.")
     ap.add_argument("--backend", default="auto",
                     help="exec backend for integer ops: auto|oracle|pallas")
     ap.add_argument("--mesh", default=None, metavar="SHAPE",
@@ -93,7 +98,7 @@ def main():
         n_pages = args.cache_len // args.page_size * args.max_batch + 1
         kw = dict(max_batch=args.max_batch, page_size=args.page_size,
                   n_pages=n_pages, backend=args.backend, mesh=mesh,
-                  wire=args.wire)
+                  wire=args.wire, decode_horizon=args.decode_horizon)
         engine = (PagedServingEngine.from_exported(params, cfg, **kw)
                   if args.exported else
                   PagedServingEngine(params, cfg, **kw))

@@ -740,6 +740,129 @@ def decode_step_paged(
 
 
 # ---------------------------------------------------------------------------
+# State-tree slot axes (shared by the serving engines and the fused decode)
+# ---------------------------------------------------------------------------
+
+def batch_state_axes(state: Params, scan_layers: bool = True) -> Params:
+    """Per-leaf slot axis of a dense decode state: stacked unit states are
+    [n_units, B, ...] -> 1; unstacked / remainder states are [B, ...] -> 0."""
+    def f(path, a):
+        names = [str(getattr(p, "key", "")) for p in path]
+        return 1 if (scan_layers and "units" in names) else 0
+    return jax.tree_util.tree_map_with_path(f, state)
+
+
+def paged_state_axes(state: Params, scan_layers: bool = True) -> Params:
+    """Per-leaf slot axis of a paged decode state.
+
+    Page pools (``k_pages``/``v_pages``) are shared by every slot and get
+    the sentinel -1 (pass whole / take whole); per-slot leaves (running
+    exponents, recurrent states) get their slot axis as in
+    ``batch_state_axes``."""
+    def f(path, a):
+        names = [str(getattr(p, "key", "")) for p in path]
+        if names and names[-1] in ("k_pages", "v_pages"):
+            return -1
+        return 1 if (scan_layers and "units" in names) else 0
+    return jax.tree_util.tree_map_with_path(f, state)
+
+
+def _keep_slots(old, new, ax: int, on: jax.Array):
+    """Revert a state leaf to ``old`` for slots where ``on`` is False.
+    ``ax`` is the leaf's slot axis (-1: shared pool leaf, always new)."""
+    if ax == -1:
+        return new
+    m = on.reshape((1,) * ax + (-1,) + (1,) * (new.ndim - ax - 1))
+    return jnp.where(m, new, old)
+
+
+def decode_horizon_paged(
+    p: Params,
+    cfg: ModelConfig,
+    state: Params,
+    tokens: jax.Array,
+    pos: jax.Array,
+    page_table: jax.Array,
+    *,
+    horizon: int,
+    active: jax.Array,
+    budget: jax.Array,
+    remaining: jax.Array,
+    eos: jax.Array,
+    greedy: bool = True,
+    temperature: float = 1.0,
+    rng: jax.Array | None = None,
+    mesh=None,
+    backend=None,
+):
+    """Fused multi-step decode: ``horizon`` iterations of
+    ``decode_step_paged`` inside ONE ``lax.scan``, with sampling, per-slot
+    EOS / token-budget detection, position advance and paged-KV writes all
+    on device — the serving engine syncs with the host once per macro-step
+    instead of once per token.
+
+    ``tokens`` [B, 1] are each slot's last generated tokens (0 for masked
+    slots); ``pos`` [B] the positions they will be written at;
+    ``page_table`` [B, n_max] the PRE-BUILT physical page map covering
+    every position the scan can reach (the engine's ``_ensure_capacity``
+    reserves [pos, pos + budget) up front).  Per-slot int32/bool vectors:
+
+      * ``active``    — False: empty or mid-prefill slot; rides the batch
+        inert for the whole horizon (null-page writes, leaves reverted).
+      * ``budget``    — device steps the slot may take this macro-step
+        (<= horizon; the engine shrinks it when the page pool is tight).
+      * ``remaining`` — tokens left before ``max_new_tokens``.
+      * ``eos``       — per-slot stop token id, -1 when none.
+
+    Step ``t`` masks a slot exactly the way the engine's single-step path
+    masks non-decoding slots — zeroed table row (writes land on the null
+    page), per-slot leaves reverted, fed token 0, position frozen — so
+    ``horizon`` fused steps are token- AND KV-bit-identical to ``horizon``
+    single ``decode_step_paged`` calls with host-side masking, including a
+    slot that hits EOS or exhausts its token budget mid-horizon.
+    Recurrent (rwkv/rglru) per-step states ride the scan carry like every
+    other per-slot leaf.
+
+    Returns ``(tok_block [B, horizon], emitted [B, horizon] bool,
+    new_state, new_pos, new_rng)``; ``emitted[s]`` is a prefix mask — the
+    host appends ``tok_block[s, t]`` for every True ``emitted[s, t]``."""
+    from repro.serving.paged_cache import NULL_PAGE
+    axes = paged_state_axes(state, cfg.scan_layers)
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    temp = jnp.maximum(temperature, 1e-6)
+
+    def body(carry, _):
+        st, tok, ps, act, bud, rem, key = carry
+        on = act & (bud > 0)
+        tbl = jnp.where(on[:, None], page_table, NULL_PAGE)
+        lg, st2 = decode_step_paged(p, cfg, st, tok, ps, tbl,
+                                    mesh=mesh, backend=backend)
+        st2 = jax.tree.map(lambda o, n, ax: _keep_slots(o, n, ax, on),
+                           st, st2, axes)
+        logits = lg[:, -1] / temp
+        key, sub = jax.random.split(key)
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(sub, logits,
+                                         axis=-1).astype(jnp.int32)
+        rem2 = jnp.where(on, rem - 1, rem)
+        fin = on & ((nxt == eos) | (rem2 <= 0))
+        tok2 = jnp.where(on, jnp.where(fin, 0, nxt), tok[:, 0])[:, None]
+        carry2 = (st2, tok2, ps + on.astype(ps.dtype), act & ~fin,
+                  bud - on.astype(bud.dtype), rem2, key)
+        return carry2, (nxt, on)
+
+    carry = (state, tokens, jnp.asarray(pos, jnp.int32), active,
+             jnp.asarray(budget, jnp.int32), jnp.asarray(remaining,
+                                                         jnp.int32), rng)
+    (st, _, ps, _, _, _, key), (toks, ons) = jax.lax.scan(
+        body, carry, None, length=horizon)
+    return (jnp.moveaxis(toks, 0, 1), jnp.moveaxis(ons, 0, 1), st, ps, key)
+
+
+# ---------------------------------------------------------------------------
 # Loss
 # ---------------------------------------------------------------------------
 

@@ -1,4 +1,5 @@
-"""Serving: continuous-batching engines (dense + paged INT8 KV cache)."""
+"""Serving: continuous-batching engines (dense + paged INT8 KV cache)
+with fused multi-step decode (``decode_horizon`` macro-steps)."""
 from .engine import (
     PagedServingEngine,
     Request,
@@ -6,10 +7,11 @@ from .engine import (
     dequantize_kv,
     quantize_kv,
 )
-from .paged_cache import paged_cache_bytes
+from .paged_cache import page_span, paged_cache_bytes
 from .scheduler import PageAllocator, Scheduler
 
 __all__ = [
     "PageAllocator", "PagedServingEngine", "Request", "Scheduler",
-    "ServingEngine", "dequantize_kv", "paged_cache_bytes", "quantize_kv",
+    "ServingEngine", "dequantize_kv", "page_span", "paged_cache_bytes",
+    "quantize_kv",
 ]

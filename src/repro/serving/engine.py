@@ -38,10 +38,24 @@ Production pattern (vLLM-style, TPU-adapted):
     prompt; lower the budget when decode-latency jitter matters more
     than TTFT (a budget of one chunk serializes prompt admission across
     slots and multiplies TTFT by the mid-prefill slot count);
-  * decode advances ALL decoding slots one token per call (per-slot
-    position vector); slots still mid-prefill ride along masked out —
-    zeroed page-table rows land their writes on the null page and their
-    per-slot state reverts after the step;
+  * fused decode horizon: every heartbeat runs up to ``decode_horizon``
+    (pow2, default 8 on the paged engine) decode steps inside ONE jitted
+    ``lax.scan`` macro-step — greedy/sampled token selection, per-slot
+    EOS and max-token detection, position advance, and the paged-KV
+    writes all stay on device, and the host syncs once per macro-step to
+    drain a [B, H] token block instead of once per token.  The scanned
+    body advances ALL decoding slots together (per-slot position
+    vector); slots still mid-prefill — or finishing mid-horizon — ride
+    along masked out: zeroed page-table rows land their writes on the
+    null page and their per-slot state reverts each scan step, so H
+    fused steps are token- and KV-bit-identical to H single-step calls.
+    Raise ``decode_horizon`` when decode is dispatch-bound (many small
+    kernel launches per token — the regime every BENCH_serving cell
+    measured pre-fusion); keep it at 1 when the page pool runs tight
+    (horizon page reservations add transient pressure, though budgets
+    shrink rather than preempt) or when a strict per-token SLO on the
+    tokens right after TTFT matters — the first decode token of a
+    request is only visible to the host after its whole macro-step;
   * finished slots are freed and re-usable; requests stop on
     ``max_new_tokens``, cache capacity, or their ``eos_token``;
   * eviction (paged engine): when the page pool runs dry mid-decode the
@@ -92,13 +106,24 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.model import (
+    batch_state_axes,
+    decode_horizon_paged,
     decode_step,
     decode_step_paged,
     forward_paged_chunk,
     init_decode_state,
     init_paged_decode_state,
+    paged_state_axes,
 )
-from .paged_cache import NULL_PAGE
+from .paged_cache import NULL_PAGE, page_span
+
+
+def _check_horizon(h) -> int:
+    h = int(h)
+    if h < 1 or (h & (h - 1)):
+        raise ValueError(f"decode_horizon must be a power of two >= 1, "
+                         f"got {h}")
+    return h
 
 
 @dataclasses.dataclass
@@ -136,13 +161,10 @@ def dequantize_kv(codes: jax.Array, scale: jax.Array, dtype) -> jax.Array:
     return (codes.astype(jnp.float32) * scale).astype(dtype)
 
 
-def _batch_axes_tree(state, scan_layers: bool = True):
-    """Per-leaf slot axis: stacked unit states are [n_units, B, ...] -> 1;
-    unstacked / remainder states are [B, ...] -> 0."""
-    def f(path, a):
-        names = [str(getattr(p, "key", "")) for p in path]
-        return 1 if (scan_layers and "units" in names) else 0
-    return jax.tree_util.tree_map_with_path(f, state)
+# Slot-axis trees live next to the state builders in ``models.model``
+# (``batch_state_axes`` / ``paged_state_axes``); these aliases keep the
+# engine's historical private names working for downstream code.
+_batch_axes_tree = batch_state_axes
 
 
 # ---------------------------------------------------------------------------
@@ -152,14 +174,22 @@ def _batch_axes_tree(state, scan_layers: bool = True):
 class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
                  cache_len: int = 1024, prefill_chunk: int = 64,
+                 decode_horizon: int = 1,
                  mesh=None, greedy: bool = True, temperature: float = 1.0,
-                 seed: int = 0, backend="auto"):
+                 seed: int = 0, backend="auto", profile: bool = False):
         from repro.exec import get_backend
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.prefill_chunk = prefill_chunk
+        # Fused decode horizon (pow2): up to this many decode steps run
+        # inside one jitted lax.scan per step() heartbeat, with a single
+        # host sync draining the [B, H] token block.  Default 1 keeps the
+        # reference engine on the classic one-token heartbeat; the paged
+        # engine defaults to 8 (see PagedServingEngine).
+        self.decode_horizon = _check_horizon(decode_horizon)
+        self.profile = profile
         self.mesh = mesh
         self.greedy = greedy
         self.temperature = temperature
@@ -173,9 +203,23 @@ class ServingEngine:
 
         self.state = init_decode_state(cfg, max_batch, cache_len)
         self.pos = np.zeros(max_batch, np.int32)      # next position per slot
+        # Device-resident copy of ``pos``: decode advances it functionally
+        # inside the jitted scan; the host mirror is only re-uploaded when
+        # host code writes it (admission / prefill), not every step.
+        self._pos_dev = None
+        self._pos_dirty = True
         self.slots: list = [None] * max_batch
-        self._decode = jax.jit(self._decode_impl)
+        self.reset_counters()
+        self._decode = jax.jit(self._decode_impl, static_argnums=(0,))
         self._prefill = jax.jit(self._prefill_impl)
+
+    def reset_counters(self) -> None:
+        """Zero the dispatch/latency counters (benchmarks call this after
+        warmup so compile time stays out of the measured window)."""
+        self.decode_dispatches = 0     # jitted decode launches
+        self.decode_device_steps = 0   # scan steps across those launches
+        self.decode_seconds = 0.0      # wall time dispatch -> token drain
+        self.horizon_hist: dict[int, int] = {}  # scan length -> launches
 
     @classmethod
     def from_exported(cls, params, cfg: ModelConfig, *, policy=None, **kw):
@@ -220,10 +264,22 @@ class ServingEngine:
             state, st, axes)
         return new_state, lg
 
-    def _decode_impl(self, params, state, tokens, pos, rng):
-        """One decode step for all slots.  tokens [B, 1], pos [B]."""
+    def _decode_impl(self, h, params, state, tokens, pos, active, budget,
+                     remaining, eos, rng):
+        """``h`` fused decode steps for all slots in ONE ``lax.scan``.
+
+        tokens [B, 1]; pos/budget/remaining/eos [B] int32; active [B]
+        bool.  Sampling, EOS / token-budget detection and position
+        advance all happen on device; the host drains the [B, h] token
+        block once per call.  A slot that finishes (EOS or last token)
+        mid-horizon keeps riding the batch with its position frozen and
+        token 0 fed, exactly like an empty slot, so ``h`` fused steps
+        emit the same tokens as ``h`` single-step calls.  ``eos`` is -1
+        for slots without a stop token.  Returns (tok_block [B, h],
+        emitted [B, h] prefix mask, state, pos, rng)."""
         cfg = self.cfg
-        axes = _batch_axes_tree(state, self.cfg.scan_layers)
+        axes = _batch_axes_tree(state, cfg.scan_layers)
+        temp = jnp.maximum(self.temperature, 1e-6)
 
         def one(st, tok, ps):
             # vmap strips the slot axis; reinsert a size-1 batch dim.
@@ -234,14 +290,30 @@ class ServingEngine:
             st2 = jax.tree.map(lambda a, ax: jnp.squeeze(a, ax), st2, axes)
             return lg[0, -1], st2
 
-        logits, new_state = jax.vmap(
-            one, in_axes=(axes, 0, 0), out_axes=(0, axes))(state, tokens, pos)
-        logits = logits / jnp.maximum(self.temperature, 1e-6)
-        if self.greedy:
-            nxt = jnp.argmax(logits, axis=-1)
-        else:
-            nxt = jax.random.categorical(rng, logits, axis=-1)
-        return nxt.astype(jnp.int32), new_state
+        def body(carry, _):
+            st, tok, ps, act, bud, rem, key = carry
+            on = act & (bud > 0)
+            logits, st2 = jax.vmap(
+                one, in_axes=(axes, 0, 0), out_axes=(0, axes))(st, tok, ps)
+            logits = logits / temp
+            key, sub = jax.random.split(key)
+            if self.greedy:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                nxt = jax.random.categorical(sub, logits,
+                                             axis=-1).astype(jnp.int32)
+            rem2 = jnp.where(on, rem - 1, rem)
+            fin = on & ((nxt == eos) | (rem2 <= 0))
+            tok2 = jnp.where(on, jnp.where(fin, 0, nxt), tok[:, 0])[:, None]
+            carry2 = (st2, tok2, ps + on.astype(ps.dtype), act & ~fin,
+                      bud - on.astype(bud.dtype), rem2, key)
+            return carry2, (nxt, on)
+
+        carry = (state, tokens, pos, active, budget, remaining, rng)
+        (st, _, ps, _, _, _, key), (toks, ons) = jax.lax.scan(
+            body, carry, None, length=h)
+        return (jnp.moveaxis(toks, 0, 1), jnp.moveaxis(ons, 0, 1),
+                st, ps, key)
 
     # -- host API -----------------------------------------------------------
 
@@ -259,13 +331,15 @@ class ServingEngine:
             jnp.asarray(slot, jnp.int32), jnp.asarray(L, jnp.int32))
         self.slots[slot] = req
         self.pos[slot] = L
+        self._pos_dirty = True
         req.out.append(int(jnp.argmax(logits[0])))
         if len(req.out) >= req.max_new_tokens or req.hit_eos():
             req.done = True  # finished on the prefill token; step() sweeps
         return True
 
     def step(self) -> list:
-        """One decode step for every active slot; returns finished requests."""
+        """One decode macro-step (up to ``decode_horizon`` tokens per
+        slot) for every active slot; returns finished requests."""
         finished = []
         for i, r in enumerate(self.slots):  # finished at admission (eos etc.)
             if r is not None and r.done:
@@ -274,18 +348,48 @@ class ServingEngine:
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return finished
-        tokens = np.zeros((self.max_batch, 1), np.int32)
-        for i in active:
-            tokens[i, 0] = self.slots[i].out[-1]
-        self.rng, sub = jax.random.split(self.rng)
-        nxt, self.state = self._decode(
-            self.params, self.state, jnp.asarray(tokens),
-            jnp.asarray(self.pos), sub)
-        nxt = np.asarray(nxt)
+        B = self.max_batch
+        tokens = np.zeros((B, 1), np.int32)
+        mask = np.zeros(B, np.bool_)
+        bud = np.zeros(B, np.int32)
+        rem = np.zeros(B, np.int32)
+        eos = np.full(B, -1, np.int32)
         for i in active:
             r = self.slots[i]
-            r.out.append(int(nxt[i]))
-            self.pos[i] += 1
+            tokens[i, 0] = r.out[-1]
+            mask[i] = True
+            rem[i] = r.max_new_tokens - len(r.out)
+            # Never scan past the cache: the last writable position is
+            # cache_len - 2 (matching the old per-step pos bound check).
+            bud[i] = min(self.decode_horizon,
+                         self.cache_len - 1 - int(self.pos[i]))
+            if r.eos_token is not None:
+                eos[i] = r.eos_token
+        # Snap the scan length to the largest useful step count (pow2 so
+        # the jit compiles at most log2(decode_horizon)+1 variants).
+        h = max(1, max(int(min(bud[i], rem[i])) for i in active))
+        h = 1 << (h - 1).bit_length()
+        if self._pos_dirty:
+            self._pos_dev = jnp.asarray(self.pos)
+            self._pos_dirty = False
+        t0 = time.perf_counter()
+        blk, em, self.state, self._pos_dev, self.rng = self._decode(
+            h, self.params, self.state, jnp.asarray(tokens), self._pos_dev,
+            jnp.asarray(mask), jnp.asarray(bud), jnp.asarray(rem),
+            jnp.asarray(eos), self.rng)
+        blk = np.asarray(blk)
+        em = np.asarray(em)
+        self.decode_seconds += time.perf_counter() - t0
+        self.decode_dispatches += 1
+        self.decode_device_steps += h
+        self.horizon_hist[h] = self.horizon_hist.get(h, 0) + 1
+        for i in active:
+            r = self.slots[i]
+            for t in range(h):
+                if not em[i, t]:
+                    break
+                r.out.append(int(blk[i, t]))
+                self.pos[i] += 1    # device pos advanced identically
             if (len(r.out) >= r.max_new_tokens
                     or self.pos[i] >= self.cache_len - 1
                     or r.hit_eos()):
@@ -309,19 +413,7 @@ class ServingEngine:
 # Paged engine (continuous batching over the INT8 page pool)
 # ---------------------------------------------------------------------------
 
-def _paged_axes_tree(state, scan_layers: bool = True):
-    """Per-leaf slot axis for the paged state tree.
-
-    Page pools (``k_pages``/``v_pages``) are shared by every slot and get
-    the sentinel -1 (pass whole / take whole); per-slot leaves (running
-    exponents, recurrent states) get their slot axis as in
-    ``_batch_axes_tree``."""
-    def f(path, a):
-        names = [str(getattr(p, "key", "")) for p in path]
-        if names and names[-1] in ("k_pages", "v_pages"):
-            return -1
-        return 1 if (scan_layers and "units" in names) else 0
-    return jax.tree_util.tree_map_with_path(f, state)
+_paged_axes_tree = paged_state_axes
 
 
 class PagedServingEngine:
@@ -346,6 +438,16 @@ class PagedServingEngine:
         max_batch``: every slot advances one chunk per heartbeat).
         Lower it to bound decode-step latency jitter at the cost of
         slower prompt-backlog draining (and so higher TTFT).
+      * ``decode_horizon``       — fused decode steps per heartbeat
+        (pow2, default 8): one jitted scan emits up to H tokens per slot
+        with a single host sync.  Raise it when decode is
+        dispatch-bound; 1 restores the classic per-token heartbeat
+        (tight page pools, strict per-token SLO).  ``_ensure_capacity``
+        pre-reserves each slot's pages over [pos, pos+H) and shrinks the
+        slot's budget instead of preempting when the pool is tight.
+      * ``profile``              — re-enable the per-prefill-chunk
+        ``block_until_ready`` timing sync (fills ``prefill_seconds``);
+        off by default so chunk dispatches overlap on device.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
@@ -353,9 +455,10 @@ class PagedServingEngine:
                  max_pages_per_slot: int | None = None,
                  prefill_chunk: int = 16,
                  prefill_token_budget: int | None = None,
+                 decode_horizon: int = 8,
                  mesh=None, greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0, backend="auto",
-                 wire: str = "int8"):
+                 wire: str = "int8", profile: bool = False):
         from repro.exec import get_backend
         from .scheduler import Scheduler
         if any(k == "local" for k in cfg.block_pattern) or cfg.softcap:
@@ -373,6 +476,17 @@ class PagedServingEngine:
         self.prefill_token_budget = max(
             int(prefill_token_budget) if prefill_token_budget
             else self.prefill_chunk * max_batch, 1)
+        # Fused decode horizon (pow2): up to this many decode steps per
+        # heartbeat run inside ONE jitted lax.scan, with a single host
+        # sync draining the [B, H] token block.  _ensure_capacity
+        # pre-reserves each slot's pages over [pos, pos + H) and shrinks
+        # the slot's budget (never preempting) when the pool is tight.
+        # 1 degenerates to the classic one-token heartbeat.
+        self.decode_horizon = _check_horizon(decode_horizon)
+        # profile=True restores the per-prefill-chunk block_until_ready
+        # timing sync (prefill_seconds) and decode timing; off (default),
+        # prefill chunks of co-resident slots overlap their dispatch.
+        self.profile = profile
         self.mesh = mesh
         self.greedy = greedy
         self.temperature = temperature
@@ -404,14 +518,29 @@ class PagedServingEngine:
                                max_pages_per_slot=max_pages_per_slot,
                                admit_chunk=self.prefill_chunk)
         self.pos = np.zeros(max_batch, np.int32)      # next position per slot
+        # Device-resident pos (see ServingEngine): the fused decode scan
+        # advances positions functionally on device; the host mirror is
+        # re-uploaded only after host writes (admission, prefill chunks).
+        self._pos_dev = None
+        self._pos_dirty = True
         # Mid-prefill bookkeeping: slot -> full resume stream (prompt +
         # pre-preemption output).  While a slot is here, ``pos[slot]`` is
         # its prefilled_len — the last completed chunk boundary.
         self._mid_prefill: dict[int, np.ndarray] = {}
-        self.prefill_tokens = 0      # prompt tokens pushed through chunks
-        self.prefill_seconds = 0.0   # wall time inside chunk forwards
-        self._decode = jax.jit(self._decode_impl)
+        self.reset_counters()
+        self._decode = jax.jit(self._decode_impl, static_argnums=(0,))
         self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
+
+    def reset_counters(self) -> None:
+        """Zero dispatch/latency counters (benchmarks call this after the
+        warmup request so compile time stays out of the window)."""
+        self.prefill_tokens = 0      # prompt tokens pushed through chunks
+        self.prefill_seconds = 0.0   # wall in chunk forwards (profile=True)
+        self.prefill_dispatches = 0  # prefill chunk launches
+        self.decode_dispatches = 0   # fused decode launches
+        self.decode_device_steps = 0  # scan steps across those launches
+        self.decode_seconds = 0.0    # wall time dispatch -> token drain
+        self.horizon_hist: dict[int, int] = {}  # scan length -> launches
 
     @classmethod
     def from_exported(cls, params, cfg: ModelConfig, *, policy=None, **kw):
@@ -455,35 +584,22 @@ class PagedServingEngine:
             state, st, axes)
         return new_state, lg[:, -1]
 
-    def _decode_impl(self, params, state, tokens, pos, table, active, rng):
-        """One decode step for all slots.  tokens [B, 1]; pos [B];
-        table [B, n_max]; active [B] bool (False = empty or mid-prefill
-        slot).  Pools are shared, so this is one batched
-        ``decode_step_paged`` (no vmap): inactive slots carry all-null
-        table rows (the host zeroes them) so their writes land on the
-        masked null page, and their per-slot leaves — running exponents,
-        recurrent states — are reverted below, so riding along in the
-        batch cannot disturb a slot that is not decoding."""
-        cfg = self.cfg
-        logits, new_state = decode_step_paged(
-            params, cfg, state, tokens, pos, table, mesh=self.mesh,
-            backend=self.backend)
-        axes = _paged_axes_tree(state, cfg.scan_layers)
-
-        def keep(old, new, ax):
-            if ax == -1:
-                return new
-            m = active.reshape((1,) * ax + (-1,)
-                               + (1,) * (new.ndim - ax - 1))
-            return jnp.where(m, new, old)
-
-        new_state = jax.tree.map(keep, state, new_state, axes)
-        logits = logits[:, -1] / jnp.maximum(self.temperature, 1e-6)
-        if self.greedy:
-            nxt = jnp.argmax(logits, axis=-1)
-        else:
-            nxt = jax.random.categorical(rng, logits, axis=-1)
-        return nxt.astype(jnp.int32), new_state
+    def _decode_impl(self, h, params, state, tokens, pos, table, active,
+                     budget, remaining, eos, rng):
+        """``h`` fused decode steps for all slots in ONE ``lax.scan`` —
+        the scanned body is ``decode_step_paged`` with the PR-8 masking
+        applied per scan step: slots that are inactive (empty or
+        mid-prefill), finished mid-horizon (EOS / last token), or out of
+        page budget carry all-null table rows (their garbage writes land
+        on the masked null page) and have their per-slot leaves — running
+        exponents, recurrent states — reverted, so riding along in the
+        batch cannot disturb a slot that is not decoding.  See
+        ``models.model.decode_horizon_paged`` for the contract."""
+        return decode_horizon_paged(
+            params, self.cfg, state, tokens, pos, table,
+            horizon=h, active=active, budget=budget, remaining=remaining,
+            eos=eos, greedy=self.greedy, temperature=self.temperature,
+            rng=rng, mesh=self.mesh, backend=self.backend)
 
     # -- host API -----------------------------------------------------------
 
@@ -503,6 +619,7 @@ class PagedServingEngine:
             slot, req, resume = got
             self._mid_prefill[slot] = np.asarray(resume, np.int32)
             self.pos[slot] = 0
+            self._pos_dirty = True
 
     def _preempt(self, slot: int) -> None:
         """Preempt a slot (decoding or mid-prefill), releasing its pages.
@@ -516,8 +633,7 @@ class PagedServingEngine:
         evicts only slots admitted LATER than ``slot`` (so prefill never
         steals from older work); False means pause at this chunk
         boundary — the slot keeps its pages and resumes next step."""
-        P = self.page_size
-        for p in range(start - start % P, end, P):
+        for p in page_span(start, end, self.page_size):
             while not self.sched.grow(slot, p):
                 victim = self.sched.evict_candidate(exclude=slot)
                 if victim is None or (self.sched._admitted_at[victim]
@@ -546,16 +662,22 @@ class PagedServingEngine:
                 c = 1 << (c.bit_length() - 1)         # pow2 chunk sizes
                 if not self._grow_range(s, done, done + c):
                     return                            # pool dry: pause
-                t0 = time.perf_counter()
+                t0 = time.perf_counter() if self.profile else 0.0
                 self.state, logits = self._prefill_chunk(
                     self.params, self.state,
                     jnp.asarray(resume[done:done + c][None]),
                     jnp.asarray(s, jnp.int32), jnp.asarray(done, jnp.int32),
                     jnp.asarray(self.sched.table[s:s + 1]))
-                logits.block_until_ready()
-                self.prefill_seconds += time.perf_counter() - t0
+                if self.profile:
+                    # Timing sync only under profile=: the default path
+                    # leaves chunk dispatches of co-resident slots free
+                    # to overlap on device.
+                    logits.block_until_ready()
+                    self.prefill_seconds += time.perf_counter() - t0
+                self.prefill_dispatches += 1
                 self.prefill_tokens += c
                 self.pos[s] = done + c
+                self._pos_dirty = True
                 budget -= c
                 if done + c == len(resume):           # prompt fully cached
                     req = self.sched.slots[s]
@@ -566,11 +688,24 @@ class PagedServingEngine:
             if budget <= 0:
                 return
 
-    def _ensure_capacity(self) -> list:
-        """Grow each decoding slot's page list for its next write; a dry
-        pool preempts latest-admitted requests until the write fits.
-        Returns slots finished by running out of page budget."""
+    def _ensure_capacity(self, horizon: int = 1):
+        """Grow each decoding slot's pages for its next write plus — pool
+        permitting — the rest of its decode horizon.
+
+        The FIRST page (the next write position) keeps the old guarantee:
+        a dry pool preempts latest-admitted requests until it fits.  The
+        horizon extension over ``[pos + 1, pos + horizon)`` is
+        opportunistic (``Scheduler.grow_span`` never evicts): when the
+        pool is tight the slot's macro-step budget simply shrinks — down
+        to the single guaranteed token — instead of preempting
+        co-resident work.  Positions past a slot's budget stay masked in
+        the scan, so partially covered horizons are safe.
+
+        Returns ``(finished, budgets)``: requests finished by running out
+        of page budget, and per-slot device-step budgets [max_batch]
+        int32 (0 for empty / mid-prefill slots, else >= 1)."""
         finished = []
+        budgets = np.zeros(self.max_batch, np.int32)
         order = sorted(
             (s for s, r in enumerate(self.sched.slots)
              if r is not None and s not in self._mid_prefill),
@@ -578,20 +713,35 @@ class PagedServingEngine:
         for s in order:                               # oldest first
             if self.sched.slots[s] is None:           # evicted below
                 continue
-            if int(self.pos[s]) >= self.sched.capacity_tokens:
+            pos = int(self.pos[s])
+            if pos >= self.sched.capacity_tokens:
                 r = self.sched.finish(s)              # page budget exhausted
                 r.done = True
                 finished.append(r)
                 continue
-            while not self.sched.grow(s, int(self.pos[s])):
+            guaranteed = True
+            while not self.sched.grow(s, pos):
                 victim = self.sched.evict_candidate()
                 if victim is None or victim == s:
                     if victim == s:                   # newest = itself
                         self._preempt(s)
+                        guaranteed = False
                         break
                     raise RuntimeError("page pool dry with no evictable slot")
                 self._preempt(victim)
-        return finished
+            if not guaranteed:
+                continue
+            r = self.sched.slots[s]
+            want = max(1, min(horizon, self.sched.capacity_tokens - pos,
+                              r.max_new_tokens - len(r.out)))
+            # End of the guaranteed page, then extend page by page.
+            covered = min(pos + want,
+                          (pos // self.page_size + 1) * self.page_size)
+            if pos + want > covered:
+                covered = min(pos + want, covered + self.sched.grow_span(
+                    s, covered, pos + want))
+            budgets[s] = covered - pos
+        return finished, budgets
 
     def _admit_and_prefill(self) -> list:
         """Admit + prefill + sweep requests finished on their prefill
@@ -612,33 +762,59 @@ class PagedServingEngine:
         """One continuous-batching heartbeat: admit (slot + first-chunk
         pages), spend the prefill token budget on mid-prefill slots,
         sweep requests finished on their prefill token, ensure decode
-        pages (evicting if dry), then one masked batched decode over
-        every decoding slot (mid-prefill slots ride along inert), and
-        finally re-admit into any slots the decode sweep freed."""
+        pages over each slot's horizon (evicting only for the first
+        token if dry), then ONE fused decode macro-step — up to
+        ``decode_horizon`` tokens per decoding slot inside a single
+        jitted scan (mid-prefill slots ride along inert) — drain the
+        [B, H] token block, and finally re-admit into any slots the
+        decode sweep freed."""
         finished = self._admit_and_prefill()
-        finished.extend(self._ensure_capacity())
+        fin_cap, budgets = self._ensure_capacity(self.decode_horizon)
+        finished.extend(fin_cap)
         active = [s for s, r in enumerate(self.sched.slots)
                   if r is not None and s not in self._mid_prefill]
         if not active:
             return finished
-        tokens = np.zeros((self.max_batch, 1), np.int32)
-        mask = np.zeros(self.max_batch, np.bool_)
+        B = self.max_batch
+        tokens = np.zeros((B, 1), np.int32)
+        mask = np.zeros(B, np.bool_)
+        rem = np.zeros(B, np.int32)
+        eos = np.full(B, -1, np.int32)
         for s in active:
-            tokens[s, 0] = self.sched.slots[s].out[-1]
+            r = self.sched.slots[s]
+            tokens[s, 0] = r.out[-1]
             mask[s] = True
+            rem[s] = r.max_new_tokens - len(r.out)
+            if r.eos_token is not None:
+                eos[s] = r.eos_token
         # Zero the table rows of non-decoding slots: their (garbage)
         # writes land on the null page instead of live cache pages.
         table = np.where(mask[:, None], self.sched.table, NULL_PAGE)
-        self.rng, sub = jax.random.split(self.rng)
-        nxt, self.state = self._decode(
-            self.params, self.state, jnp.asarray(tokens),
-            jnp.asarray(self.pos), jnp.asarray(table),
-            jnp.asarray(mask), sub)
-        nxt = np.asarray(nxt)
+        # Scan just long enough for the biggest per-slot budget, snapped
+        # to pow2 (at most log2(decode_horizon)+1 compiled variants).
+        h = max(1, max(int(budgets[s]) for s in active))
+        h = 1 << (h - 1).bit_length()
+        if self._pos_dirty:
+            self._pos_dev = jnp.asarray(self.pos)
+            self._pos_dirty = False
+        t0 = time.perf_counter()
+        blk, em, self.state, self._pos_dev, self.rng = self._decode(
+            h, self.params, self.state, jnp.asarray(tokens), self._pos_dev,
+            jnp.asarray(table), jnp.asarray(mask), jnp.asarray(budgets),
+            jnp.asarray(rem), jnp.asarray(eos), self.rng)
+        blk = np.asarray(blk)     # the macro-step's single host sync
+        em = np.asarray(em)
+        self.decode_seconds += time.perf_counter() - t0
+        self.decode_dispatches += 1
+        self.decode_device_steps += h
+        self.horizon_hist[h] = self.horizon_hist.get(h, 0) + 1
         for s in active:
             r = self.sched.slots[s]
-            r.out.append(int(nxt[s]))
-            self.pos[s] += 1
+            for t in range(h):
+                if not em[s, t]:
+                    break
+                r.out.append(int(blk[s, t]))
+                self.pos[s] += 1  # device pos advanced identically
             if len(r.out) >= r.max_new_tokens or r.hit_eos():
                 r.done = True
                 finished.append(self.sched.finish(s))

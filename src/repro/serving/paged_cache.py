@@ -36,6 +36,15 @@ NULL_PAGE = 0
 EXP_FLOOR = -24
 
 
+def page_span(start: int, end: int, page_size: int) -> range:
+    """Page-aligned start positions of every page holding [start, end).
+
+    The host-side page walk shared by prefill's chunk growth and the
+    decode-horizon reservation: ``range(align_down(start), end,
+    page_size)`` — empty when ``end <= start``."""
+    return range(start - start % page_size, end, page_size)
+
+
 def po2_exponent(x: jax.Array) -> jax.Array:
     """Smallest PO2 exponent whose 127-code range covers ``x``.
 

@@ -36,7 +36,7 @@ from collections import deque
 
 import numpy as np
 
-from .paged_cache import NULL_PAGE
+from .paged_cache import NULL_PAGE, page_span
 
 
 class PageAllocator:
@@ -171,6 +171,23 @@ class Scheduler:
         return slot, req, resume
 
     # -- mid-decode --------------------------------------------------------
+
+    def grow_span(self, slot: int, start: int, end: int) -> int:
+        """Opportunistically grow pages covering positions [start, end).
+
+        Never evicts: allocation stops at the first page the pool cannot
+        supply (pages already granted are kept — they cover the slot's
+        next writes anyway).  Returns the number of positions covered
+        from ``start``; the engine turns it into the slot's fused-decode
+        step budget.  ``start`` must be page-aligned relative to the
+        slot's already-guaranteed pages (the engine passes the end of the
+        page holding ``pos``)."""
+        covered = 0
+        for pstart in page_span(start, end, self.page_size):
+            if not self.grow(slot, pstart):
+                break
+            covered = pstart + self.page_size - start
+        return max(covered, 0)
 
     def grow(self, slot: int, pos: int) -> bool:
         """Ensure the page holding position ``pos`` exists for ``slot``.

@@ -4,8 +4,26 @@ Forces 8 CPU host devices (before any jax import) so the dist tests in
 ``test_dist_tp.py`` can build 2- and 8-way meshes; single-device tests
 are unaffected — unsharded computation runs on device 0 as before.
 Honors a caller-provided XLA_FLAGS (setdefault, no override).
+
+Also drops jax's compiled-executable caches between test modules: each
+compile holds several memory mappings (LLVM JIT code pages), and the
+full suite's thousands of compiles otherwise walk the process into the
+kernel's ``vm.max_map_count`` ceiling (default 65530), where the next
+``mmap`` failure segfaults the XLA compiler mid-run.  Clearing per
+module keeps the map count bounded; cross-module recompiles are a few
+seconds against a ~30-minute suite.
 """
 import os
 
+import pytest
+
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jax_jit_cache():
+    yield
+    import jax
+
+    jax.clear_caches()

@@ -318,8 +318,11 @@ def test_prefill_pauses_at_chunk_boundary_and_resumes(params):
     b = Request(uid=1, tokens=_prompt(12, seed=2), max_new_tokens=4)
     roomy = _single_stream(params, [(0, a.tokens, 4), (1, b.tokens, 4)])
 
+    # decode_horizon=1: the pause needs the older slot to hold the pool
+    # across >= 2 heartbeats; a fused horizon drains it in one macro-step
+    # (the horizon-shrink path has its own test below).
     eng = _engine(params, max_batch=2, page_size=4, n_pages=5,
-                  prefill_chunk=4)
+                  prefill_chunk=4, decode_horizon=1)
     eng.add_request(Request(uid=0, tokens=a.tokens, max_new_tokens=4))
     eng.add_request(Request(uid=1, tokens=b.tokens, max_new_tokens=4))
     done, paused, snaps = [], False, []
@@ -347,8 +350,11 @@ def test_mid_prefill_preemption_replays_exactly(params):
     re-prefills from scratch and still matches the roomy engine."""
     spec = [(i, _prompt(10 + i, seed=i), 6) for i in range(4)]
     single = _single_stream(params, spec)
+    # decode_horizon=1 keeps decode slow enough that prefill collides
+    # with live decode pages (horizon preemption is covered below).
     eng = _engine(params, max_batch=4, page_size=4, n_pages=8,
-                  prefill_chunk=4, prefill_token_budget=4)
+                  prefill_chunk=4, prefill_token_budget=4,
+                  decode_horizon=1)
     done = eng.run([Request(uid=u, tokens=t, max_new_tokens=n)
                     for u, t, n in spec])
     assert eng.sched.stats.preempted > 0, "pool was not small enough"
@@ -365,3 +371,186 @@ def test_local_window_arch_rejected():
     p = init_lm(jax.random.PRNGKey(0), cfg)
     with pytest.raises(NotImplementedError):
         PagedServingEngine(p, cfg, max_batch=1)
+
+
+# ---------------------------------------------------------------------------
+# Fused decode horizon (PR 10): H fused steps == H single steps, bit-exact
+# ---------------------------------------------------------------------------
+
+_HORIZON_CFGS = {
+    "dense": CFG,
+    "moe": ModelConfig(name="hm", family="dense", n_layers=2, d_model=32,
+                       n_heads=4, n_kv_heads=2, d_ff=64, vocab=96,
+                       dtype="float32", mlp="moe", n_experts=4, top_k=2),
+    "recurrent": ModelConfig(name="hr", family="dense", n_layers=3,
+                             d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                             vocab=96, dtype="float32",
+                             block_pattern=("attn", "rwkv", "rglru"),
+                             d_rnn=32),
+}
+
+
+def _ref_single_steps(cfg, p, state, tokens, pos, table, h, *, active,
+                      budget, remaining, eos, rng, backend):
+    """H UNFUSED ``decode_step_paged`` calls with the engine's host-side
+    masking — the de-fused reference ``decode_horizon_paged`` must match
+    bit-for-bit (tokens, emitted mask, positions, every state leaf)."""
+    from repro.models.model import paged_state_axes
+    axes = paged_state_axes(state, cfg.scan_layers)
+    act, bud, rem = map(jnp.asarray, (active, budget, remaining))
+    toks, ons = [], []
+    for _ in range(h):
+        on = act & (bud > 0)
+        tbl = jnp.where(on[:, None], table, NULL_PAGE)
+        lg, st2 = decode_step_paged(p, cfg, state, tokens, pos, tbl,
+                                    backend=backend)
+
+        def keep(old, new, ax):
+            if ax == -1:
+                return new
+            m = on.reshape((1,) * ax + (-1,) + (1,) * (new.ndim - ax - 1))
+            return jnp.where(m, new, old)
+
+        state = jax.tree.map(keep, state, st2, axes)
+        rng, sub = jax.random.split(rng)
+        nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+        rem = jnp.where(on, rem - 1, rem)
+        fin = on & ((nxt == eos) | (rem <= 0))
+        tokens = jnp.where(on, jnp.where(fin, 0, nxt), tokens[:, 0])[:, None]
+        pos = pos + on.astype(pos.dtype)
+        act = act & ~fin
+        bud = bud - on.astype(bud.dtype)
+        toks.append(nxt)
+        ons.append(on)
+    return (jnp.stack(toks, 1), jnp.stack(ons, 1), state, pos, rng)
+
+
+def _horizon_case(cfg, backend, *, h=4, eos=(-1, -1, -1), remaining=(9, 9, 9)):
+    """Fused vs unfused horizon on a 3-slot batch (slot 2 rides inert)."""
+    from repro.models.model import decode_horizon_paged
+    p = init_lm(jax.random.PRNGKey(1), cfg)
+    B, P = 3, 4
+    state = init_paged_decode_state(cfg, B, page_size=P, n_pages=16)
+    table = jnp.asarray([[1, 2, 3], [4, 5, 6], [NULL_PAGE] * 3], jnp.int32)
+    pos = jnp.asarray([0, 2, 0], jnp.int32)
+    tokens = jnp.asarray([[7], [11], [0]], jnp.int32)
+    kw = dict(active=jnp.asarray([True, True, False]),
+              budget=jnp.asarray([h, h, 0], jnp.int32),
+              remaining=jnp.asarray(remaining, jnp.int32),
+              eos=jnp.asarray(eos, jnp.int32), rng=jax.random.PRNGKey(9))
+    fused = decode_horizon_paged(p, cfg, state, tokens, pos, table,
+                                 horizon=h, backend=backend, **kw)
+    ref = _ref_single_steps(cfg, p, state, tokens, pos, table, h,
+                            backend=backend, **kw)
+    return fused, ref
+
+
+def _assert_bit_identical(fused, ref):
+    f_tok, f_on, f_st, f_pos, f_key = fused
+    r_tok, r_on, r_st, r_pos, r_key = ref
+    assert jnp.array_equal(f_tok, r_tok), (f_tok, r_tok)
+    assert jnp.array_equal(f_on, r_on), (f_on, r_on)
+    assert jnp.array_equal(f_pos, r_pos)
+    assert jnp.array_equal(f_key, r_key)
+    for fl, rl in zip(jax.tree.leaves(f_st), jax.tree.leaves(r_st)):
+        assert fl.dtype == rl.dtype and jnp.array_equal(fl, rl)
+
+
+@pytest.mark.parametrize("arch", sorted(_HORIZON_CFGS))
+def test_horizon_fused_bit_identical_oracle(arch):
+    """Tokens, emitted masks, positions AND every cache/recurrent state
+    leaf (codes, exponents, rnn carries) match H single steps exactly."""
+    fused, ref = _horizon_case(_HORIZON_CFGS[arch], "oracle")
+    _assert_bit_identical(fused, ref)
+
+
+@pytest.mark.parametrize("arch", ["dense", "moe"])
+def test_horizon_fused_bit_identical_pallas(arch):
+    from repro.exec import PallasBackend
+    be = PallasBackend(interpret=True)
+    fused, ref = _horizon_case(_HORIZON_CFGS[arch], be)
+    _assert_bit_identical(fused, ref)
+
+
+def test_horizon_mid_eos_and_exhaustion_bit_identical():
+    """A slot hitting EOS (slot 0) or its last token (slot 1) mid-horizon
+    stops emitting, freezes its position, and writes only to the null
+    page thereafter — bit-identical to the masked single-step path."""
+    cfg = CFG
+    # First pass to discover what slot 0 emits at step 1; use it as EOS.
+    (tok, _, _, _, _), _ = _horizon_case(cfg, "oracle")
+    eos0 = int(tok[0, 1])
+    fused, ref = _horizon_case(cfg, "oracle", eos=(eos0, -1, -1),
+                               remaining=(9, 2, 9))
+    _assert_bit_identical(fused, ref)
+    f_on = np.asarray(fused[1])
+    assert f_on[0].tolist() == [True, True, False, False]   # stopped at EOS
+    assert f_on[1].tolist() == [True, True, False, False]   # out of tokens
+    f_pos = np.asarray(fused[3])
+    assert f_pos.tolist() == [2, 4, 0]
+
+
+@pytest.mark.parametrize("h", [1, 2, 8])
+def test_engine_horizon_matches_single_stream(params, h):
+    """Whole-engine degeneracy sweep: any decode_horizon produces the
+    same streams as the single-stream engine (h=1 IS the old path)."""
+    spec = [(i, _prompt(4 + 2 * i, seed=i), 5 + i) for i in range(4)]
+    single = _single_stream(params, spec)
+    eng = _engine(params, max_batch=3, page_size=4, n_pages=32,
+                  decode_horizon=h)
+    done = eng.run([Request(uid=u, tokens=t, max_new_tokens=n)
+                    for u, t, n in spec])
+    assert {r.uid: r.out for r in done} == single
+    eng.sched.assert_invariants()
+    if h == 8:
+        assert max(eng.horizon_hist) > 1      # fusion actually engaged
+
+
+def test_engine_horizon_shrinks_under_near_dry_pool(params):
+    """A tight pool shrinks macro-step budgets (grow_span never evicts)
+    instead of preempting: outputs still match the roomy engine and some
+    macro-steps run with fewer than decode_horizon fused steps."""
+    spec = [(i, _prompt(6, seed=i), 10) for i in range(2)]
+    single = _single_stream(params, spec)
+    eng = _engine(params, max_batch=2, page_size=4, n_pages=7,
+                  prefill_chunk=4, decode_horizon=8)
+    done = eng.run([Request(uid=u, tokens=t, max_new_tokens=n)
+                    for u, t, n in spec])
+    assert {r.uid: r.out for r in done} == single
+    eng.sched.assert_invariants()
+    assert any(k < 8 for k in eng.horizon_hist), eng.horizon_hist
+
+
+def test_engine_horizon_preemption_between_macro_steps(params):
+    """A pool too small for both long decodes preempts the latest slot
+    between macro-steps (never mid-scan); the replayed request still
+    matches the single-stream outputs and no page leaks."""
+    spec = [(0, _prompt(6, seed=3), 24), (1, _prompt(6, seed=4), 24)]
+    single = _single_stream(params, spec)
+    eng = _engine(params, max_batch=2, page_size=4, n_pages=9,
+                  prefill_chunk=4, decode_horizon=8)
+    done = []
+    while eng.sched.waiting or any(s is not None for s in eng.sched.slots) \
+            or not done:
+        if not done and not eng.sched.waiting:
+            for u, t, n in spec:
+                eng.add_request(Request(uid=u, tokens=t, max_new_tokens=n))
+        done.extend(eng.step())
+        eng.sched.assert_invariants()          # after every macro-step
+    assert eng.sched.stats.preempted > 0, "pool was not small enough"
+    assert {r.uid: r.out for r in done} == single
+    assert eng.sched.alloc.n_free == 8
+
+
+def test_horizon_one_bit_identical_to_fused_path(params):
+    """decode_horizon=1 and the pre-fusion single-step engine semantics
+    coincide: dispatch counters show one launch per token."""
+    spec = [(0, _prompt(5), 6)]
+    eng = _engine(params, max_batch=1, page_size=4, n_pages=16,
+                  decode_horizon=1)
+    done = eng.run([Request(uid=u, tokens=t, max_new_tokens=n)
+                    for u, t, n in spec])
+    assert len(done[0].out) == 6
+    # 1 token from prefill logits + 5 decode tokens, one launch each.
+    assert eng.decode_dispatches == eng.decode_device_steps == 5
+    assert set(eng.horizon_hist) == {1}

@@ -86,6 +86,33 @@ def test_engine_eos_token_stops_stream():
     assert eng.slots == [None]
 
 
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "recurrentgemma-2b",
+                                  "rwkv6-3b"])
+def test_engine_decode_horizon_matches_single_step(arch):
+    """Non-paged parity knob: decode_horizon=4 fuses 4 decode steps into
+    one scan with a device-resident position vector, and emits exactly
+    the single-step (h=1) streams — including mid-horizon EOS stops."""
+    cfg = get_smoke(arch)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    # One engine per horizon, reused for both halves (same shapes, so the
+    # EOS half adds no fresh scan compiles).
+    engines = {h: ServingEngine(params, cfg, max_batch=2, cache_len=64,
+                                prefill_chunk=8, decode_horizon=h)
+               for h in (1, 4)}
+    reqs = lambda: [Request(uid=i, tokens=np.arange(4 + 3 * i) % cfg.vocab,
+                            max_new_tokens=3 + 2 * i) for i in range(3)]
+    outs = {h: {r.uid: r.out for r in engines[h].run(reqs())}
+            for h in (1, 4)}
+    assert outs[1] == outs[4]
+    # mid-horizon EOS: pick a token the longest stream emits mid-flight
+    eos = outs[1][2][1]
+    stop = {h: engines[h].run(
+        [Request(uid=9, tokens=np.arange(10) % cfg.vocab,
+                 max_new_tokens=40, eos_token=eos)])[0].out
+            for h in (1, 4)}
+    assert stop[1] == stop[4]
+
+
 def test_int8_kv_roundtrip():
     x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, 4, 8))
     codes, scale = quantize_kv(x)
